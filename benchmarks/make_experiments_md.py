@@ -1,0 +1,226 @@
+"""Regenerate EXPERIMENTS.md from dryrun_results.jsonl +
+benchmarks/results.json.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+import json
+import os
+
+from benchmarks.roofline import markdown, table
+
+
+def _load(path):
+    try:
+        return json.load(open(path))
+    except Exception:
+        return {}
+
+
+def _perf_rows(results_path="dryrun_results.jsonl"):
+    rows = {}
+    for line in open(results_path):
+        r = json.loads(line)
+        if r.get("status") == "OK" and r.get("mesh") == "16x16":
+            rows[(r["arch"], r["shape"], r.get("label"))] = r
+    return rows
+
+
+def _fmt(r):
+    if r is None:
+        return "— | — | — | —"
+    return (f"{r['t_compute_s']:.2f} | {r['t_memory_s']:.2f} | "
+            f"{r['t_collective_s']:.2f} | {r.get('peak_memory_per_dev_gb')}")
+
+
+PERF_LOG = [
+    # (cell, label, hypothesis, verdict template)
+    ("granite-34b/train_4k", None, "BASELINE (paper-faithful: remat=full, "
+     "SP, ZeRO-1, chunked attention)", ""),
+    ("granite-34b/train_4k", "g1-remat-dots",
+     "remat=dots saves matmul outputs -> compute term down ~20% "
+     "(no fwd-matmul recompute) at some memory cost", ""),
+    ("granite-34b/train_4k", "g3-full+loss-chunk512",
+     "scanning the CE loss over 512-token chunks removes the [B,S,V] fp32 "
+     "materialization -> memory term down a few %", ""),
+    ("granite-34b/train_4k", "g4-dots+losschunk+attnchunk512",
+     "smaller attention kv-chunk (512) shrinks transients further", ""),
+    ("granite-34b/train_4k", "g5-no-seq-parallel",
+     "the 3.4TB of AllToAll is GSPMD resharding seq<->heads at every "
+     "attention boundary; disabling SP should slash the collective term "
+     "at the price of replicated residuals", ""),
+    ("granite-34b/train_4k", "g6-no-remat",
+     "remat=none halves the memory *term* (no fwd recompute traffic) but "
+     "peak memory must explode past HBM", ""),
+    ("granite-34b/train_4k", "g7-nosp+accum4",
+     "recover g5's peak-memory cost with 4-way grad accumulation", ""),
+    ("granite-34b/train_4k", "g8-nosp+accum8",
+     "8-way accumulation: baseline-level peak at g5's traffic profile", ""),
+    ("deepseek-v2-236b/train_4k", None, "BASELINE (EP via shard_map "
+     "AllToAll, experts ZeRO-3 over data, MLA flash)", ""),
+    ("deepseek-v2-236b/train_4k", "d1-capacity1.0",
+     "capacity factor 1.25 -> 1.0 cuts expert compute+A2A by 20%", ""),
+    ("deepseek-v2-236b/train_4k", "d2-dots+capacity1.0",
+     "remat=dots on top: compute down, memory up (saved dots)", ""),
+    ("deepseek-v2-236b/train_4k", "d4-nosp+accum4",
+     "transfer the granite lesson: no-SP + grad-accum 4 + capacity 1.0", ""),
+    ("granite-34b/prefill_32k", None, "BASELINE prefill", ""),
+    ("granite-34b/prefill_32k", "p1-no-qblock-map",
+     "q-block lax.map is a sequential loop over a GSPMD-sharded dim -> "
+     "every device recomputes all blocks; drop it", ""),
+    ("qwen3-14b/prefill_32k", "p2-no-qblock-map", "same fix, qwen3", ""),
+    ("deepseek-v2-236b/prefill_32k", "p3-no-qblock-map",
+     "same fix, deepseek-v2", ""),
+    ("minitron-8b/decode_32k", None,
+     "BASELINE — worst cell of the whole table (192.8 GB/device!)", ""),
+    ("minitron-8b/decode_32k", "m1-cache-batch-shard",
+     "the naive cache heuristic sharded the LAYER-STACK dim over data, "
+     "forcing per-layer gathers of the whole KV cache; shard the batch "
+     "dim instead", ""),
+    ("minitron-8b/decode_32k", "m2-m1+cache-seq-over-model",
+     "kv=8 heads cannot shard over the 16-way model axis, so also shard "
+     "the 32k KV *sequence* dim over model (partial-softmax decode)", ""),
+]
+
+
+def main():
+    perf = _perf_rows()
+    res = _load(os.path.join(os.path.dirname(__file__), "results.json"))
+
+    out = []
+    w = out.append
+    w(open(os.path.join(os.path.dirname(__file__),
+                        "experiments_narrative.md")).read())
+
+    w("\n## §Dry-run\n")
+    ok16 = [r for r in table("dryrun_results.jsonl", "16x16")
+            if r["status"] == "OK"]
+    ok2 = [r for r in table("dryrun_results.jsonl", "2x16x16")
+           if r["status"] == "OK"]
+    skip = [r for r in table("dryrun_results.jsonl", "16x16")
+            if r["status"] == "SKIP"]
+    w(f"Every (architecture × shape) cell lowered **and compiled** with "
+      f"`jax.jit(...).lower().compile()` on both production meshes:\n\n"
+      f"* single pod 16×16 (`('data','model')`): **{len(ok16)} cells OK**\n"
+      f"* two pods 2×16×16 (`('pod','data','model')`): **{len(ok2)} cells "
+      f"OK** — the `pod` axis shards the global batch, proving the "
+      f"multi-pod dimension is coherent\n"
+      f"* **{len(skip)} documented skips** (long_500k on pure "
+      f"full-attention decoders, per DESIGN.md §Shape-applicability)\n\n"
+      f"{len(ok16)} + {len(skip)} = 40 accounted cells per mesh; "
+      f"`dryrun_results.jsonl` carries the full "
+      f"memory_analysis/cost_analysis record per cell.\n")
+
+    w("\n## §Roofline\n")
+    w("Terms per the assignment: `compute = HLO_FLOPs/(chips·197TF)`, "
+      "`memory = HLO_bytes/(chips·819GB/s)`, `collective = coll_bytes/"
+      "(chips·50GB/s)`; all from the **trip-count-aware HLO walk** "
+      "(XLA's `cost_analysis()` counts `while` bodies once — see "
+      "`launch/hlo_analysis.py`; its raw numbers are retained in the "
+      "JSONL as `xla_*_once`). `useful` = MODEL_FLOPS/(HLO_FLOPs·chips) "
+      "with MODEL_FLOPS = 6·N_active·D for training, 2·N_active·D for "
+      "inference. `roofline frac` = ideal-compute-time / dominant term.\n")
+    w(markdown(table("dryrun_results.jsonl", "16x16")))
+    w("\n**Reading the table.** Training cells are memory-term dominated "
+      "(XLA on this path materializes fp32 attention score/prob tensors "
+      "in HBM and the full-remat backward re-streams the forward); decode "
+      "cells are memory-bound by construction (weights+KV per token) — "
+      "their near-zero compute-roofline fraction is the physics of "
+      "single-token decoding, not an inefficiency. The `useful` column "
+      "(0.5-0.7 for dense training) quantifies remat+attention overhead "
+      "directly.\n")
+
+    w("\n### Multi-pod (2×16×16) summary\n")
+    w("| arch | shape | dominant | useful | peak GB |\n|---|---|---|---|---|")
+    for r in ok2:
+        w(f"| {r['arch']} | {r['shape']} | {r['dominant']} | "
+          f"{r['useful_ratio']} | {r['peak_gb']} |")
+
+    w("\n## §Perf — hillclimb log (hypothesis → change → measure → verdict)\n")
+    w("Three cells per the assignment: worst roofline fraction "
+      "(minitron-8b/decode_32k, 192.8GB/dev), most collective-bound "
+      "trade (granite-34b/train_4k — largest absolute collective term "
+      "among trains), and most representative of the paper's technique "
+      "(deepseek-v2-236b/train_4k: the EP AllToAll pattern of Table IV).\n")
+    w("| cell | variant | hypothesis | compute s | memory s | coll s | "
+      "peak GB |\n|---|---|---|---|---|---|---|")
+    for cell, label, hyp, _ in PERF_LOG:
+        arch, shape = cell.split("/")
+        r = perf.get((arch, shape, label))
+        w(f"| {cell} | {label or 'baseline'} | {hyp} | {_fmt(r)} |")
+    w(open(os.path.join(os.path.dirname(__file__),
+                        "perf_narrative.md")).read())
+
+    w("\n## §Fidelity — STAGE predictions vs the compiled artifact\n")
+    fid = res.get("stg_vs_xla") or []
+    if fid:
+        w("| arch | shape | STG/XLA flops ratio | coll ratio |\n|---|---|---|---|")
+        for r in fid:
+            w(f"| {r['arch']} | {r['shape']} | {r['flops_ratio']} | "
+              f"{r.get('coll_ratio')} |")
+        w("\n**Characterization.** Training cells land at 0.5-1.0 "
+          "(rwkv6 ≈ 1.00, gemma2 0.92, jamba 0.85, granite 0.78): the "
+          "residual is the runtime's chunked-attention mask/selection "
+          "elementwise work, dtype converts and FSDP gathers — the same "
+          "class of vendor/runtime ops the paper itself excludes from "
+          "STAGE (§V-C).  Prefill cells are scored against the "
+          "q-block-fixed runtime (§Perf p1-p3; `fixed_runtime` flag): "
+          "**granite 0.99, qwen3 0.99, deepseek-v2 0.97** — i.e. once "
+          "the runtime defect STAGE itself exposed is removed, the "
+          "symbolic prediction matches the compiled program at the "
+          "~1-3% level, which is the paper's tensor-level-accuracy claim "
+          "re-established against a compiler oracle.  Decode cells sit "
+          "lower because the runtime decode path adds cache management "
+          "(concat/DUS/ring shifts) the STG models as zero-FLOP data "
+          "movement.  Collective ratios < 1 mean GSPMD emits more "
+          "traffic than the STG's minimal matched collectives — the "
+          "analytical plan is a *lower bound* the compiled program can "
+          "be driven toward (the paper's co-design loop).")
+    else:
+        w("(populated by `python -m benchmarks.run` → see bench_output.txt)")
+
+    w("\n## §Paper tables\n")
+    w("Full structured rows in `benchmarks/results.json` / "
+      "`bench_output.txt`.  Summary of reproduction fidelity:\n")
+    t5 = res.get("table5_memory") or []
+    if t5:
+        w("\n**Table V (peak memory/GPU)** — ours vs the paper's "
+          "synthesized column:\n")
+        w("| model | parallel | paper synth GB | ours GB | err |\n"
+          "|---|---|---|---|---|")
+        for r in t5:
+            w(f"| {r['model']} | {r['parallel']} | {r['paper_synth_gb']} | "
+              f"{r['ours_gb']} | {r['err_vs_paper_synth']:.0%} |")
+    t7 = res.get("table7_commvol") or []
+    if t7:
+        w("\n**Table VII (comm volume/GPU/epoch)** — totals over the "
+          "collectives the paper lists:\n")
+        w("| model | parallel | paper MB | ours MB | err |\n|---|---|---|---|---|")
+        for r in t7:
+            w(f"| {r['model']} | {r['parallel']} | "
+              f"{sum(r['paper_mb'].values()):.0f} | "
+              f"{sum(r['ours_mb'].get(k, 0) for k in r['paper_mb']):.0f} | "
+              f"{r['total_err']:.0%} |")
+    t9 = res.get("table9_moe_inference") or []
+    if t9:
+        w("\n**Table IX (EP prefill/decode disaggregation)**:\n")
+        w("| cluster | decode tok/s/GPU | prefill tok/s/GPU |\n|---|---|---|")
+        for r in t9:
+            w(f"| {r['gpus']} | {r['decode_tok_s_gpu']} | "
+              f"{r['prefill_tok_s_gpu']} |")
+    f13 = res.get("fig13_generator_scaling") or []
+    if f13:
+        w("\n**Fig 13 (generator scalability)** — paper: 540B @ 32K GPUs "
+          "in ~28 min:\n")
+        w("| model | GPUs | generate s | stamp-all-ranks s | total s |\n"
+          "|---|---|---|---|---|")
+        for r in f13:
+            w(f"| {r['model']} | {r['gpus']} | {r['generate_s']} | "
+              f"{r['export_all_ranks_s']} | {r['total_s']} |")
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(out) + "\n")
+    print(f"wrote EXPERIMENTS.md ({len(out)} blocks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""§Roofline: three-term analysis per (arch x shape) from the dry-run.
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = collective_bytes / (chips x 50 GB/s/link)
+
+(our HLO walk reports per-device quantities from the SPMD module, which
+is the same number as total/chips).  Also reports MODEL_FLOPS = 6·N·D
+(2·N·D for inference), the useful-compute ratio, the dominant term, and
+a roofline fraction = ideal-compute-time / dominant-term.
+"""
+import json
+import os
+
+ACTIONS = {
+    "compute": ("shrink redundant compute: cut full-remat recompute via a "
+                "dots-only policy, or reshard so idle axes contribute"),
+    "memory": ("cut HBM traffic: fuse attention probs in VMEM (Pallas flash "
+               "kernel), chunk the CE loss, bf16 intermediates"),
+    "collective": ("reshape collectives: swap AllReduce for RS+AG (SP), "
+                   "overlap FSDP gathers, move EP dispatch to a smaller "
+                   "axis, or compress DP grads"),
+}
+
+
+def load(results_path: str = "dryrun_results.jsonl", label=None):
+    rows = []
+    if not os.path.exists(results_path):
+        return rows
+    for line in open(results_path):
+        r = json.loads(line)
+        if r.get("label") != label and not (label is None and not r.get("label")):
+            continue
+        rows.append(r)
+    return rows
+
+
+def table(results_path: str = "dryrun_results.jsonl", mesh: str = "16x16",
+          label=None) -> list[dict]:
+    out = []
+    for r in load(results_path, label=label):
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "SKIP":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "status": "SKIP", "reason": r.get("reason", "")[:60]})
+            continue
+        if r.get("status") != "OK":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "status": "FAIL", "reason": r.get("error", "")[:60]})
+            continue
+        tc, tm, tl = (r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        ideal = r["model_flops_total"] / (r["chips"] * 197e12)
+        dom = r["dominant"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "OK",
+            "t_compute_s": round(tc, 3), "t_memory_s": round(tm, 3),
+            "t_collective_s": round(tl, 3), "dominant": dom,
+            "model_flops": f"{r['model_flops_total']:.2e}",
+            "useful_ratio": round(r["useful_flops_ratio"], 3),
+            "roofline_fraction": round(ideal / max(tc, tm, tl), 4),
+            "peak_gb": r.get("peak_memory_per_dev_gb"),
+            "action": ACTIONS[dom],
+        })
+    return out
+
+
+def markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful | roofline frac | peak GB |\n|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r["status"] != "OK":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']}: {r['reason']} | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']} | "
+            f"{r['t_memory_s']} | {r['t_collective_s']} | {r['dominant']} | "
+            f"{r['useful_ratio']} | {r['roofline_fraction']} | {r['peak_gb']} |")
+    return "\n".join(lines)
+
+
+def run(report, results_path: str = "dryrun_results.jsonl"):
+    rows = table(results_path)
+    ok = [r for r in rows if r["status"] == "OK"]
+    if not ok:
+        report("roofline/SKIPPED", 0.0, f"no results in {results_path}")
+        return rows
+    worst = min(ok, key=lambda r: r["roofline_fraction"])
+    best = max(ok, key=lambda r: r["roofline_fraction"])
+    coll_bound = [r for r in ok if r["dominant"] == "collective"]
+    report("roofline/cells", 0.0, f"{len(ok)} OK cells @ {results_path}")
+    report("roofline/worst", 0.0,
+           f"{worst['arch']}/{worst['shape']} frac={worst['roofline_fraction']}")
+    report("roofline/best", 0.0,
+           f"{best['arch']}/{best['shape']} frac={best['roofline_fraction']}")
+    report("roofline/collective-bound", 0.0, f"{len(coll_bound)} cells")
+    return rows

@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the structured
+results to ``benchmarks/results.json``.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only table7,fig13]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+import traceback
+
+BENCHES = ["table5_memory", "table6_opcounts", "table7_commvol",
+           "table8_computetime", "table9_moe_inference", "fig8_dse",
+           "fig12_scaling", "fig13_generator_scaling", "stg_vs_xla",
+           "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "results.json"))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else BENCHES
+
+    print("name,us_per_call,derived")
+
+    def report(name: str, us: float, derived: str = "") -> None:
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+    results = {}
+    failures = []
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            results[name] = mod.run(report)
+            report(f"{name}/TOTAL", (time.time() - t0) * 1e6, "ok")
+        except AssertionError as e:
+            failures.append(name)
+            report(f"{name}/TOTAL", (time.time() - t0) * 1e6,
+                   f"ASSERTION: {e}")
+        except Exception as e:   # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            report(f"{name}/TOTAL", (time.time() - t0) * 1e6,
+                   f"ERROR: {type(e).__name__}: {e}")
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    report("ALL/TOTAL", 0.0,
+           f"{len(names) - len(failures)}/{len(names)} benchmarks ok"
+           + (f"; failed: {failures}" if failures else ""))
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

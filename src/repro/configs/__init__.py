@@ -1,0 +1,1 @@
+from .base import ARCHS, SHAPES, Arch, ShapeSpec, all_archs, get

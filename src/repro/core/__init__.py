@@ -1,0 +1,42 @@
+"""STAGE core: the paper's Symbolic Tensor Graph generator.
+
+Pipeline (paper Fig 3):
+  ModelSpec -> build_graph (templates + assembly) -> distribute (tensor-
+  level + matcher) -> apply_pipeline (graph-level) -> instantiate
+  (symbolic -> numeric) -> {chakra export, memory, costmodel, simulate, dse}.
+"""
+from .assemble import (MLASpec, ModelSpec, MoESpec, SSMSpec, bind_env,
+                       build_graph, total_layers)
+from .chakra import export_ranks, export_stage
+from .costmodel import H100_HGX, TPU_V5E, HardwareProfile
+from .distribute import ParallelCfg, distribute
+from .graphdist import apply_pipeline
+from .instantiate import Workload, instantiate
+from .matcher import CommStep, match
+from .memory import MemoryReport, peak_memory
+from .simulate import SimResult, simulate
+from .stg import Graph, GraphBuilder, add_optimizer, backward
+from .symbolic import Env, sym
+from .tensor import REPLICATED, STensor, ShardSpec
+
+__all__ = [
+    "MLASpec", "ModelSpec", "MoESpec", "SSMSpec", "bind_env", "build_graph",
+    "total_layers", "export_ranks", "export_stage", "H100_HGX", "TPU_V5E",
+    "HardwareProfile", "ParallelCfg", "distribute", "apply_pipeline",
+    "Workload", "instantiate", "CommStep", "match", "MemoryReport",
+    "peak_memory", "SimResult", "simulate", "Graph", "GraphBuilder",
+    "add_optimizer", "backward", "Env", "sym", "REPLICATED", "STensor",
+    "ShardSpec", "generate",
+]
+
+
+def generate(spec: ModelSpec, cfg: ParallelCfg, *, batch: int, seq: int,
+             kv_len=None, mode: str = "train", name=None) -> tuple:
+    """One-call STAGE pipeline: returns (workload, graph, plan, env)."""
+    env = bind_env(spec, batch=batch, seq=seq, kv_len=kv_len)
+    builder = build_graph(spec, mode=mode)
+    graph = builder.graph
+    distribute(graph, cfg, env)
+    plan = apply_pipeline(graph, cfg.pp, total_layers(spec))
+    w = instantiate(graph, cfg, env, plan, name=name or f"{spec.name}/{mode}")
+    return w, graph, plan, env

@@ -1,0 +1,70 @@
+"""Roofline compute + ring-collective communication cost model.
+
+The paper's compute model is "a mixture of lookup table of benchmarked
+operators [and] a calibrated roofline model" (§V-C).  Without bench
+hardware we use the calibrated-roofline half: per-category MXU/ALU
+efficiencies × a compute/memory roofline, and α–β ring terms for the
+collectives (the same first-order math ASTRA-sim's analytical backend
+uses).  Profiles for the TPU v5e target and an H100 reference (for
+paper-table comparisons) are included.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .instantiate import NodeRec
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    peak_flops: float                    # bf16 FLOP/s per chip
+    hbm_bw: float                        # bytes/s
+    link_bw: float                       # bytes/s per direction, default axis
+    link_bw_axis: dict = field(default_factory=dict)   # per-axis override
+    link_latency: float = 2.0e-6         # per ring step (s)
+    efficiency: dict = field(default_factory=lambda: {
+        "GeMM": 0.85, "Attn": 0.70, "ElementWise": 0.90, "Others": 0.90})
+    mem_capacity: float = 16 * 2**30     # bytes HBM per chip
+
+    def axis_bw(self, axis: str) -> float:
+        return self.link_bw_axis.get(axis, self.link_bw)
+
+
+# TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (assignment
+# constants); the "pod" axis crosses DCI at lower bandwidth.
+TPU_V5E = HardwareProfile(
+    name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
+    link_bw_axis={"pod": 25e9}, mem_capacity=16 * 2**30)
+
+# H100 SXM5 (paper validation cluster): 989 TFLOP/s bf16 dense, 3.35 TB/s
+# HBM3, 450 GB/s NVLink within a box, 50 GB/s IB across boxes.
+H100_HGX = HardwareProfile(
+    name="h100-hgx", peak_flops=989e12, hbm_bw=3.35e12, link_bw=450e9,
+    link_bw_axis={"dp": 50e9, "pp": 50e9}, mem_capacity=80 * 2**30)
+
+
+def compute_time(n: NodeRec, hw: HardwareProfile) -> float:
+    """Roofline: max(flops-limited, HBM-bandwidth-limited)."""
+    eff = hw.efficiency.get(n.category, 0.9)
+    t_flops = n.flops / (hw.peak_flops * eff) if n.flops else 0.0
+    t_mem = n.bytes_accessed / hw.hbm_bw
+    return max(t_flops, t_mem)
+
+
+def comm_time(n: NodeRec, hw: HardwareProfile) -> float:
+    """α–β ring model on the collective's mesh axis."""
+    if n.comm is None:
+        return 0.0
+    g = max(1, int(n.comm["group"]))
+    if g <= 1:
+        return 0.0
+    bw = hw.axis_bw(n.comm["axis"])
+    steps = (g - 1) if n.comm["coll"] != "AllReduce" else 2 * (g - 1)
+    return n.comm["wire"] / bw + steps * hw.link_latency
+
+
+def node_time(n: NodeRec, hw: HardwareProfile) -> float:
+    return comm_time(n, hw) if n.comm is not None else compute_time(n, hw)

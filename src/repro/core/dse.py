@@ -1,0 +1,119 @@
+"""Design-space exploration driver (paper §VI-A, Fig 8/9).
+
+Enumerates parallelization strategies for a fixed device count, runs the
+full STAGE pipeline (assemble → distribute → pipeline-cut → instantiate)
+for each point, and scores it with the analytical simulator + memory
+model.  This doubles as the runtime framework's auto-parallelism
+advisor: rank configurations before compiling anything.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional
+
+from .costmodel import HardwareProfile, TPU_V5E
+from .distribute import ParallelCfg, distribute
+from .graphdist import apply_pipeline
+from .instantiate import Workload, instantiate
+from .memory import MemoryReport, peak_memory
+from .simulate import SimResult, simulate
+from .symbolic import Env
+
+
+@dataclass
+class DSEPoint:
+    cfg: ParallelCfg
+    sim: SimResult
+    mem: MemoryReport
+    label: str = ""
+
+    @property
+    def step_ms(self) -> float:
+        return self.sim.step_time * 1e3
+
+    @property
+    def peak_gb(self) -> float:
+        return self.mem.peak_gb
+
+    def row(self) -> dict:
+        return {"strategy": self.cfg.describe(), "step_ms": round(self.step_ms, 3),
+                "peak_gb": round(self.peak_gb, 2),
+                "overlap": round(self.sim.overlap_ratio, 3),
+                "exposed_comm_ms": round(self.sim.exposed_comm * 1e3, 3)}
+
+
+def _pow2_divisors(n: int) -> list[int]:
+    out = [1]
+    while out[-1] * 2 <= n:
+        out.append(out[-1] * 2)
+    return [d for d in out if n % d == 0]
+
+
+def enumerate_configs(world: int, *, max_tp: int = 64, max_pp: int = 64,
+                      max_cp: int = 64, with_fsdp: bool = True,
+                      ep: Optional[int] = None,
+                      microbatches: int = 1) -> Iterable[ParallelCfg]:
+    """All (dp, tp, cp, pp) power-of-two factorizations of ``world``."""
+    for tp in _pow2_divisors(world):
+        if tp > max_tp:
+            continue
+        for cp in _pow2_divisors(world // tp):
+            if cp > max_cp:
+                continue
+            for pp in _pow2_divisors(world // (tp * cp)):
+                if pp > max_pp:
+                    continue
+                dp = world // (tp * cp * pp)
+                fsdp_opts = (False, True) if (with_fsdp and dp > 1) else (False,)
+                for fsdp in fsdp_opts:
+                    axes = {}
+                    if dp > 1:
+                        axes["dp"] = dp
+                    if tp > 1:
+                        axes["tp"] = tp
+                    if cp > 1:
+                        axes["cp"] = cp
+                    if ep and dp % ep == 0 and dp > 1:
+                        pass  # EP reuses the dp axis (tokens<->experts A2A)
+                    yield ParallelCfg(
+                        axes=axes,
+                        dp_axis="dp" if dp > 1 else None,
+                        tp_axis="tp" if tp > 1 else None,
+                        sp=tp > 1,
+                        cp_axis="cp" if cp > 1 else None,
+                        ep_axis="dp" if (ep and dp > 1) else None,
+                        fsdp=fsdp, pp=pp,
+                        microbatches=microbatches)
+
+
+def evaluate_point(build: Callable[[], tuple], cfg: ParallelCfg, env: Env,
+                   hw: HardwareProfile = TPU_V5E, *, n_layers: int,
+                   recompute: bool = False, name: str = "dse") -> DSEPoint:
+    """Run the full STAGE pipeline for one config.  ``build`` must return a
+    fresh (GraphBuilder-owned) Graph each call (graphs are mutated)."""
+    graph = build()
+    distribute(graph, cfg, env)
+    plan = apply_pipeline(graph, cfg.pp, n_layers)
+    w = instantiate(graph, cfg, env, plan, name=f"{name}/{cfg.describe()}")
+    sim = simulate(w, hw, recompute=recompute)
+    mem = peak_memory(graph, cfg, env, plan, recompute=recompute)
+    return DSEPoint(cfg=cfg, sim=sim, mem=mem, label=cfg.describe())
+
+
+def sweep(build: Callable[[], tuple], env: Env, world: int,
+          hw: HardwareProfile = TPU_V5E, *, n_layers: int,
+          mem_limit_gb: Optional[float] = None,
+          recompute: bool = False, **enum_kw) -> list[DSEPoint]:
+    points = []
+    for cfg in enumerate_configs(world, **enum_kw):
+        try:
+            pt = evaluate_point(build, cfg, env, hw, n_layers=n_layers,
+                                recompute=recompute)
+        except Exception:
+            continue                      # infeasible factorization
+        if mem_limit_gb is not None and pt.peak_gb > mem_limit_gb:
+            pt.label += " (OOM)"
+        points.append(pt)
+    points.sort(key=lambda p: p.sim.step_time)
+    return points

@@ -1,0 +1,79 @@
+"""Graph-level workload distributor — pipeline parallelism (paper §IV-D3).
+
+Unlike tensor-level distribution (each device holds tensor shards and
+collaborates on a single operator), graph-level distribution assigns
+whole *subgraphs* to device groups.  Following the paper, stages are cut
+by the rule-based even-layer split, and every tensor edge crossing a
+stage boundary becomes a Send/Recv pair.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .stg import Graph, Op, SendRecv
+
+
+@dataclass
+class PipelinePlan:
+    pp: int
+    n_layers: int
+    op_stage: dict[int, int] = field(default_factory=dict)     # op uid -> stage
+    sendrecvs: list[SendRecv] = field(default_factory=list)
+
+    def stage_of(self, op: Op) -> int:
+        return self.op_stage[op.uid]
+
+
+def _stage_for_tags(tags: dict, pp: int, n_layers: int) -> int:
+    layer = tags.get("layer")
+    if layer is None:
+        mod = tags.get("module", "")
+        if mod in ("embed", "input"):
+            return 0
+        return pp - 1          # head / loss / untagged tail ops
+    if layer < 0:
+        return 0
+    if layer >= n_layers:
+        return pp - 1
+    return min(pp - 1, layer * pp // max(1, n_layers))
+
+
+def apply_pipeline(graph: Graph, pp: int, n_layers: int) -> PipelinePlan:
+    """Assign stages and splice Send/Recv ops on cross-stage edges (in place)."""
+    plan = PipelinePlan(pp=pp, n_layers=n_layers)
+    if pp <= 1:
+        for op in graph.ops:
+            plan.op_stage[op.uid] = 0
+        return plan
+
+    producer_stage: dict[int, int] = {}        # tensor uid -> stage
+    for t in graph.inputs:
+        producer_stage[t.uid] = -1             # inputs available everywhere
+    for t in graph.weights:
+        producer_stage[t.uid] = -1             # weights live on their stage
+
+    new_ops: list[Op] = []
+    moved: dict[tuple[int, int], object] = {}  # (tensor uid, dst stage) -> tensor
+    for op in graph.ops:
+        s = _stage_for_tags(op.tags, pp, n_layers)
+        for i, t in enumerate(op.ins):
+            sp_ = producer_stage.get(t.uid, -1)
+            if sp_ in (-1, s):
+                continue
+            key = (t.uid, s)
+            if key not in moved:
+                sr = SendRecv(f"{t.name}_pp{sp_}to{s}", t, sp_, s,
+                              phase=op.phase, tags=dict(op.tags))
+                new_ops.append(sr)
+                plan.op_stage[sr.uid] = s      # recv side executes on dst
+                plan.sendrecvs.append(sr)
+                producer_stage[sr.out.uid] = s
+                moved[key] = sr.out
+            op.ins[i] = moved[key]             # type: ignore[assignment]
+        new_ops.append(op)
+        plan.op_stage[op.uid] = s
+        for t in op.outs:
+            producer_stage[t.uid] = s
+    graph.ops = new_ops
+    return plan

@@ -1,0 +1,138 @@
+"""Graph instantiation: symbolic -> numeric conversion (paper §IV-E).
+
+Replaces symbolic shapes with concrete values and produces, per pipeline
+stage, a fully numeric workload: one :class:`NodeRec` per executed op
+with FLOPs, bytes accessed, communication volume/group, and dependency
+edges.  Because every rank within a stage is SPMD-identical (tensor-level
+distribution), one representative rank per stage captures the whole
+system — this is what makes STAGE's 32K-GPU synthesis cheap (Fig 13):
+per-rank export is a stamping pass over the representative record.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .distribute import ParallelCfg
+from .graphdist import PipelinePlan
+from .stg import (CAT_COMM, Comm, Graph, Op, SendRecv, Update)
+from .symbolic import Env, prod
+from .tensor import DTYPE_BYTES
+
+
+@dataclass
+class NodeRec:
+    """One numeric node of the instantiated execution graph."""
+    uid: int
+    name: str
+    kind: str                   # op class name
+    category: str               # GeMM | Attn | ElementWise | Others | Comm
+    phase: str                  # fwd | bwd | opt
+    stage: int
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    out_bytes: float = 0.0
+    comm: Optional[dict] = None         # {coll, axis, group, size, wire}
+    deps: tuple[int, ...] = ()          # uids of producer nodes (same rank)
+    repeat: int = 1                     # executions per training step
+    tags: dict = field(default_factory=dict)
+
+
+@dataclass
+class Workload:
+    """Instantiated distributed workload (all stages, one rank each)."""
+    cfg: ParallelCfg
+    env: Env
+    nodes: list[NodeRec]
+    stage_of: dict[int, int]
+    name: str = "workload"
+
+    # ---- paper-table style summaries ------------------------------------
+    def op_counts(self, stage: int = 0, per: str = "step") -> dict[str, int]:
+        """# of executed ops per GPU by category (Table VI)."""
+        out: dict[str, int] = {}
+        for n in self.nodes:
+            if n.stage != stage or n.category == CAT_COMM:
+                continue
+            out[n.category] = out.get(n.category, 0) + n.repeat
+        return out
+
+    def comm_counts(self, stage: int = 0) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for n in self.nodes:
+            if n.stage != stage or n.comm is None:
+                continue
+            out[n.comm["coll"]] = out.get(n.comm["coll"], 0) + n.repeat
+        return out
+
+    def comm_volume(self, stage: int = 0) -> dict[str, float]:
+        """Per-GPU communication volume in bytes by collective (Table VII)."""
+        out: dict[str, float] = {}
+        for n in self.nodes:
+            if n.stage != stage or n.comm is None:
+                continue
+            k = n.comm["coll"]
+            out[k] = out.get(k, 0.0) + n.comm["size"] * n.repeat
+        return out
+
+    def flops_by_category(self, stage: int = 0) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for n in self.nodes:
+            if n.stage != stage or n.category == CAT_COMM:
+                continue
+            out[n.category] = out.get(n.category, 0.0) + n.flops * n.repeat
+        return out
+
+    def total_flops(self, stage: int = 0) -> float:
+        return sum(v for v in self.flops_by_category(stage).values())
+
+    def stage_nodes(self, stage: int) -> list[NodeRec]:
+        return [n for n in self.nodes if n.stage == stage]
+
+    @property
+    def stages(self) -> int:
+        return max((n.stage for n in self.nodes), default=0) + 1
+
+
+def instantiate(graph: Graph, cfg: ParallelCfg, env: Env,
+                plan: Optional[PipelinePlan] = None,
+                name: str = "workload") -> Workload:
+    """Ground the distributed STG into a numeric per-stage workload."""
+    mesh = cfg.mesh
+    stage_of_op = plan.op_stage if plan else {}
+    nodes: list[NodeRec] = []
+    producer_node: dict[int, int] = {}          # tensor uid -> node uid
+
+    for op in graph.ops:
+        stage = stage_of_op.get(op.uid, 0)
+        deps = tuple(sorted({producer_node[t.uid] for t in op.ins
+                             if t.uid in producer_node}))
+        comm = None
+        if isinstance(op, Comm):
+            comm = {
+                "coll": op.coll, "axis": op.axis, "group": mesh.get(op.axis, 1),
+                "size": op.comm_bytes(env, mesh),
+                "wire": op.wire_bytes(env, mesh),
+            }
+        elif isinstance(op, SendRecv):
+            comm = {
+                "coll": "SendRecv", "axis": "pp", "group": 2,
+                "size": op.comm_bytes(env, mesh),
+                "wire": op.comm_bytes(env, mesh),
+            }
+        repeat = 1 if op.phase == "opt" else cfg.microbatches
+        out_bytes = sum((env.fevaluate(prod(t.local_shape(mesh))))
+                        * DTYPE_BYTES[t.dtype] for t in op.outs
+                        if t.kind != "index")
+        rec = NodeRec(
+            uid=op.uid, name=op.name, kind=op.kind, category=op.category,
+            phase=op.phase, stage=stage,
+            flops=op.flops(env, mesh),
+            bytes_accessed=op.bytes_accessed(env, mesh),
+            out_bytes=out_bytes,
+            comm=comm, deps=deps, repeat=repeat, tags=dict(op.tags),
+        )
+        nodes.append(rec)
+        for t in op.outs:
+            producer_node[t.uid] = op.uid
+    return Workload(cfg=cfg, env=env, nodes=nodes, stage_of=stage_of_op, name=name)

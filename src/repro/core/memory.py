@@ -1,0 +1,130 @@
+"""Peak per-device memory model from tensor lifetimes (paper §V-B, Table V).
+
+The paper feeds STAGE graphs to ASTRA-sim and post-processes tensor
+read/write events into lifetimes ("from creation to last use, assuming
+garbage collection immediately thereafter").  We compute the same
+quantity directly on the instantiated graph:
+
+* **Persistent** state — weights, gradients (held across microbatches by
+  grad accumulation), optimizer moments (fp32 m+v), optional fp32 master
+  params — all at their *storage* sharding (so FSDP/ZeRO shrink them).
+* **Activations** — alive from producer to last consumer.  Tensors
+  produced by ops tagged ``fused`` (flash-attention internals) die at
+  their last *forward* consumer; with ``recompute`` (Fig 11) every
+  activation dies at the end of its layer's forward and the backward
+  working set is bounded by one layer's activations.
+* **Pipeline in-flight factor** — with 1F1B, stage ``s`` keeps
+  ``min(microbatches, pp - s)`` microbatches of activations alive.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .distribute import ParallelCfg
+from .graphdist import PipelinePlan
+from .stg import Comm, Graph, Update
+from .symbolic import Env, prod
+from .tensor import DTYPE_BYTES, STensor
+
+
+@dataclass
+class MemoryReport:
+    weights: float
+    grads: float
+    opt_states: float
+    master_params: float
+    peak_activation: float
+    inflight_factor: int
+    recompute_extra: float
+
+    @property
+    def peak_bytes(self) -> float:
+        return (self.weights + self.grads + self.opt_states + self.master_params
+                + self.peak_activation * self.inflight_factor
+                + self.recompute_extra)
+
+    @property
+    def peak_gb(self) -> float:
+        return self.peak_bytes / 2**30
+
+
+def _local_bytes(t: STensor, env: Env, mesh: dict[str, int]) -> float:
+    return (env.fevaluate(prod(t.local_shape(mesh)))) * DTYPE_BYTES[t.dtype]
+
+
+def peak_memory(graph: Graph, cfg: ParallelCfg, env: Env,
+                plan: PipelinePlan | None = None, *, stage: int = 0,
+                recompute: bool = False, master_fp32: bool = True,
+                grad_dtype: str = "fp32") -> MemoryReport:
+    mesh = cfg.mesh
+    stage_of = plan.op_stage if plan else {}
+    ops = [op for op in graph.ops if stage_of.get(op.uid, 0) == stage]
+
+    # ---- persistent state -------------------------------------------------
+    weights = grads = opt_states = master = 0.0
+    stage_weights: set[int] = set()
+    for op in ops:
+        for t in op.ins:
+            if t.kind == "weight" and t.uid not in stage_weights:
+                stage_weights.add(t.uid)
+                weights += _local_bytes(t, env, mesh)
+        if isinstance(op, Update):
+            w, g = op.ins
+            shard = op.outs[1].spec                      # opt-state sharding
+            m_bytes = (env.fevaluate(prod(w.shape))) * 4
+            deg = shard.degree(mesh)
+            opt_states += 2 * m_bytes / deg              # fp32 m + v
+            if master_fp32:
+                master += m_bytes / deg
+            grads += ((env.fevaluate(prod(w.shape)))
+                      * DTYPE_BYTES[grad_dtype] / g.spec.degree(mesh))
+
+    # ---- activation lifetimes ----------------------------------------------
+    produced_at: dict[int, int] = {}
+    last_use: dict[int, int] = {}
+    last_fwd_use: dict[int, int] = {}
+    tensors: dict[int, STensor] = {}
+    for i, op in enumerate(ops):
+        for t in op.ins:
+            if t.kind == "act":
+                last_use[t.uid] = i
+                if op.phase == "fwd":
+                    last_fwd_use[t.uid] = i
+        for t in op.outs:
+            # kind=="grad" (weight grads) live in the persistent bucket
+            if t.kind == "act":
+                produced_at[t.uid] = i
+                last_use[t.uid] = max(last_use.get(t.uid, i), i)
+                tensors[t.uid] = t
+
+    fused = {t.uid for op in ops if op.tags.get("fused")
+             for t in op.outs}
+
+    layer_act: dict[object, float] = {}
+    events: list[tuple[int, float]] = []
+    for uid, start in produced_at.items():
+        t = tensors[uid]
+        end = last_use.get(uid, start)
+        b = _local_bytes(t, env, mesh)
+        die_fwd = uid in fused or recompute
+        if die_fwd:
+            end = min(end, last_fwd_use.get(uid, start))
+        if recompute and t.producer is not None:
+            lyr = t.producer.tags.get("layer")
+            if lyr is not None and uid not in fused:
+                layer_act[lyr] = layer_act.get(lyr, 0.0) + b
+        events.append((start, b))
+        events.append((end + 1, -b))
+    events.sort()
+    cur = peak = 0.0
+    for _, delta in events:
+        cur += delta
+        peak = max(peak, cur)
+
+    pp = plan.pp if plan else 1
+    inflight = min(cfg.microbatches, pp - stage) if pp > 1 else 1
+    recompute_extra = max(layer_act.values(), default=0.0) if recompute else 0.0
+    return MemoryReport(weights=weights, grads=grads, opt_states=opt_states,
+                        master_params=master, peak_activation=peak,
+                        inflight_factor=max(1, inflight),
+                        recompute_extra=recompute_extra)

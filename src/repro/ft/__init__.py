@@ -1,0 +1,1 @@
+from .stragglers import Decision, StragglerWatchdog, elastic_mesh_shape

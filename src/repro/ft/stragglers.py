@@ -1,0 +1,65 @@
+"""Straggler detection + elastic-rescale policy (control-plane side).
+
+On a synchronous TPU pod a straggler stalls every step (collectives are
+barriers), so mitigation is *detect -> evict -> re-scale*, not work
+stealing.  The watchdog keeps an EMA of step time; a step slower than
+``threshold×`` EMA increments a strike counter per suspected host (in a
+real deployment the per-host timing comes from the coordinator service;
+here it is injected, which is also how the unit tests drive it).  On
+``max_strikes`` the policy emits an EvictAndRescale decision carrying
+the new world size — the training driver then restores the latest
+checkpoint on the shrunken mesh (see ckpt.restore + elastic notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class Decision:
+    kind: str                   # "ok" | "warn" | "evict"
+    hosts: tuple = ()
+    new_world: Optional[int] = None
+
+
+@dataclass
+class StragglerWatchdog:
+    n_hosts: int
+    threshold: float = 1.8      # step slower than 1.8x EMA -> strike
+    max_strikes: int = 3
+    decay: float = 0.9
+    ema: Optional[float] = None
+    strikes: dict = field(default_factory=dict)
+
+    def observe(self, step_time: float,
+                per_host: Optional[dict] = None) -> Decision:
+        if self.ema is None:
+            self.ema = step_time
+            return Decision("ok")
+        slow = step_time > self.threshold * self.ema
+        self.ema = self.decay * self.ema + (1 - self.decay) * step_time
+        if not slow:
+            return Decision("ok")
+        suspects = []
+        if per_host:
+            worst = max(per_host, key=per_host.get)
+            if per_host[worst] > self.threshold * self.ema:
+                suspects = [worst]
+        for h in suspects:
+            self.strikes[h] = self.strikes.get(h, 0) + 1
+            if self.strikes[h] >= self.max_strikes:
+                new_world = self.n_hosts - 1
+                return Decision("evict", hosts=(h,), new_world=new_world)
+        return Decision("warn", hosts=tuple(suspects))
+
+
+def elastic_mesh_shape(world: int, *, model: int = 16) -> tuple[int, int]:
+    """Largest (data, model) mesh fitting ``world`` chips after eviction —
+    shrink the data axis first (re-sharding params over data is cheap
+    with ZeRO/FSDP; the model axis would change every weight layout)."""
+    data = world // model
+    if data < 1:
+        raise ValueError(f"cannot fit model axis {model} in world {world}")
+    return (data, model)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical hot spots (+ jnp oracles).
+
+``flash_attention.py`` / ``rwkv6_scan.py`` hold the pl.pallas_call
+kernels with explicit BlockSpec VMEM tiling; ``ops.py`` the jit'd
+model-layout wrappers; ``ref.py`` the pure-jnp oracles used by the
+allclose test sweeps.
+"""
+from . import ops, ref
+from .flash_attention import flash_attention_bhsd
+from .rwkv6_scan import wkv6_bhsd

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None, q_offset: int = 0) -> jax.Array:
+    """Naive masked softmax attention on [B, H, S, D] tensors."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhsd,bhkd->bhsk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhsk,bhkd->bhsd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)
+
+
+def ref_wkv(r, k, v, w, u, state0):
+    """Sequential RWKV6 recurrence on [B, H, S, D]; u [H, D];
+    state0 [B, H, D, D].  Returns (out fp32, final state fp32).
+
+        out_t = r_t · (S_{t-1} + diag(u) k_t^T v_t)
+        S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    state0 = state0.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                       # [B,H,D]
+        kv = kt[..., :, None] * vt[..., None, :]   # [B,H,D,D]
+        out = jnp.einsum("bhd,bhde->bhe", rt, state + u[None, :, :, None] * kv)
+        new = wt[..., :, None] * state + kv
+        return new, out
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (r, k, v, w))   # [S,B,H,D]
+    state, outs = jax.lax.scan(step, state0, xs)
+    return outs.transpose(1, 2, 0, 3), state
+
+
+def ref_ssm(dA, dBx, h0):
+    """Sequential SSM recurrence h_t = dA_t h_{t-1} + dBx_t.
+    dA/dBx [B, S, D, P]; h0 [B, D, P] -> (all h [B,S,D,P], last h)."""
+    def step(h, inp):
+        a, x = inp
+        h = a * h + x
+        return h, h
+    xs = (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3))
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return hs.transpose(1, 0, 2, 3), h_last

@@ -1,0 +1,44 @@
+"""Production serving driver (batched continuous decoding).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get as get_arch
+from repro.models import RuntimeCfg, init_params
+from repro.serve import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--kv-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    spec = arch.smoke if args.smoke else arch.spec
+    rt = RuntimeCfg(attention_impl="naive")
+    params = init_params(spec, rt, jax.random.PRNGKey(0))
+    engine = Engine(spec, rt, params, batch_slots=args.slots,
+                    kv_len=args.kv_len)
+    rng = np.random.RandomState(0)
+    for rid in range(args.requests):
+        engine.submit(Request(rid=rid,
+                              prompt=rng.randint(1, spec.vocab,
+                                                 size=rng.randint(3, 9)),
+                              max_new=args.max_new))
+    done = engine.run(max_steps=400)
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: -> {r.out}")
+    print(f"served {len(done)}/{args.requests}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-34b --smoke
+
+``--smoke`` runs the reduced config on local devices; without it the
+full config expects a real pod (the same code path the dry-run lowers).
+Wires together: config registry, data pipeline, sharded train_step,
+checkpoint manager with resume, and the straggler watchdog.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get as get_arch
+from repro.data import DataCfg, TokenPipeline
+from repro.ft import StragglerWatchdog
+from repro.models import RuntimeCfg, init_params
+from repro.train import OptCfg, init_opt_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    spec = arch.smoke if args.smoke else arch.spec
+    rt = RuntimeCfg(attention_impl="chunked", attn_chunk=max(64, args.seq))
+    print(f"training {spec.name}: {spec.params()/1e6:.1f}M params, "
+          f"{jax.device_count()} devices")
+
+    pipe = TokenPipeline(DataCfg(global_batch=args.batch, seq_len=args.seq,
+                                 vocab=spec.vocab, seed=0,
+                                 num_hosts=jax.process_count(),
+                                 host_id=jax.process_index()))
+    mgr = CheckpointManager(args.ckpt_dir or f"/tmp/ckpt_{spec.name}",
+                            keep=2, every=10)
+    watchdog = StragglerWatchdog(n_hosts=max(1, jax.process_count()))
+
+    params = init_params(spec, rt, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    state, start = mgr.resume({"params": params, "opt": opt})
+    if state:
+        params, opt = state["params"], state["opt"]
+        print(f"resumed at step {start}")
+    step_fn = jax.jit(make_train_step(spec, rt, OptCfg(lr=1e-3, warmup=5)))
+
+    for step in range(start, args.steps):
+        t0 = time.time()
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
+        params, opt, m = step_fn(params, opt, batch)
+        d = watchdog.observe(time.time() - t0)
+        print(f"step {step:4d} loss {float(m['loss']):.4f} "
+              f"({time.time()-t0:.2f}s) [{d.kind}]", flush=True)
+        mgr.maybe_save(step + 1, {"params": params, "opt": opt},
+                       host_id=jax.process_index())
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

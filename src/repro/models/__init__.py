@@ -1,0 +1,8 @@
+"""JAX runtime model zoo (all 10 assigned architectures)."""
+from . import layers, lm
+from .common import AxisRules, Initializer, Param, RuntimeCfg, paxes, pvalue
+from .lm import decode_step, forward, init_cache, init_params, loss_fn
+
+__all__ = ["layers", "lm", "AxisRules", "Initializer", "Param", "RuntimeCfg",
+           "paxes", "pvalue", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn"]

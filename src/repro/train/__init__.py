@@ -1,0 +1,3 @@
+from .compress import topk_compress_decompress
+from .optimizer import OptCfg, adamw_update, init_opt_state, opt_state_shardings
+from .train_step import make_train_step

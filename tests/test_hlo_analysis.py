@@ -1,0 +1,90 @@
+"""Trip-count-aware HLO walker: exactness on scans + collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import HloCost, analyze_hlo
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_scan_flops_multiplied():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = _compile(f, x, x)
+    t = analyze_hlo(c.as_text())
+    want = 2 * 128**3 * 10
+    assert abs(t["flops"] - want) / want < 0.01
+
+
+def test_nested_scan_flops():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    t = analyze_hlo(_compile(g, x, x).as_text())
+    want = 2 * 128**3 * 20
+    assert abs(t["flops"] - want) / want < 0.02
+
+
+def test_unrolled_matches_scanned():
+    """FLOPs must be (approximately) representation-independent."""
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def scanned(x, w):
+        out, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=8)
+        return out
+
+    def unrolled(x, w):
+        for _ in range(8):
+            x = x @ w
+        return x
+    t1 = analyze_hlo(_compile(scanned, w, w).as_text())["flops"]
+    t2 = analyze_hlo(_compile(unrolled, w, w).as_text())["flops"]
+    assert abs(t1 - t2) / t2 < 0.02
+
+
+def test_bytes_bounded_by_touched_memory():
+    """A big elementwise chain shouldn't count more HBM traffic than a
+    small multiple of the tensors it touches."""
+    def f(x):
+        for _ in range(4):
+            x = jnp.tanh(x) * 2 + 1
+        return x
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    t = analyze_hlo(_compile(f, x).as_text())
+    touched = 1024 * 1024 * 4
+    assert t["bytes"] <= 16 * touched
+
+
+def test_dus_charged_at_slice_granularity():
+    """Scan output stacking must not charge the full stacked buffer per
+    iteration."""
+    def f(x):
+        def body(c, _):
+            c = c + 1.0
+            return c, c
+        _, ys = jax.lax.scan(body, x, None, length=64)
+        return ys
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    t = analyze_hlo(_compile(f, x).as_text())
+    slice_bytes = 256 * 256 * 4
+    # 64 iterations x O(1) slices each, NOT 64 x the full [64,256,256] buffer
+    assert t["bytes"] < 64 * 8 * slice_bytes
+
+
+def test_collectives_empty_on_single_device():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    t = analyze_hlo(_compile(lambda a: a @ a, x).as_text())
+    assert t["collective_bytes"] == 0.0

@@ -1,0 +1,110 @@
+"""Collective Communication Matcher unit tests (paper Table IV) +
+hypothesis property sweep over arbitrary producer/consumer layouts."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matcher import CommStep, MatchError, _apply_step, _canon, match
+from repro.core.tensor import ShardSpec
+
+
+def steps(p, d):
+    return [(s.coll, s.axis, s.dim, s.dim_dst) for s in match(p, d)]
+
+
+# ---- the exact rows of paper Table IV (tensor [B, S, H]) -----------------
+# producer: [B/dp, S, H@1/tp]
+P = ShardSpec.make({0: ("dp",)}, partial=("tp",))
+
+
+def test_reducescatter():
+    # -> [B/dp, S, H/tp]
+    want = ShardSpec.make({0: ("dp",), 2: ("tp",)})
+    assert steps(P, want) == [("ReduceScatter", "tp", 2, None)]
+
+
+def test_alltoall():
+    # -> [B, S/dp, H@1/tp]   (dp moves batch->seq; tp partial untouched)
+    want = ShardSpec.make({1: ("dp",)}, partial=("tp",))
+    assert steps(P, want) == [("AllToAll", "dp", 0, 1)]
+
+
+def test_allgather():
+    # -> [B, S, H@1/tp]
+    want = ShardSpec.make({}, partial=("tp",))
+    assert steps(P, want) == [("AllGather", "dp", 0, None)]
+
+
+def test_allreduce():
+    # -> [B/dp, S, H]
+    want = ShardSpec.make({0: ("dp",)})
+    assert steps(P, want) == [("AllReduce", "tp", None, None)]
+
+
+def test_reducescatter_plus_alltoall():
+    # -> [B/tp, S, H/dp]
+    want = ShardSpec.make({0: ("tp",), 2: ("dp",)})
+    got = steps(P, want)
+    assert got == [("ReduceScatter", "tp", 0, None), ("AllToAll", "dp", 0, 2)]
+
+
+def test_allreduce_plus_allgather():
+    # -> [B, S, H]
+    want = ShardSpec()
+    got = steps(P, want)
+    assert ("AllReduce", "tp", None, None) in got
+    assert ("AllGather", "dp", 0, None) in got
+    assert len(got) == 2
+
+
+def test_slice_is_local():
+    got = steps(ShardSpec(), ShardSpec.make({1: ("tp",)}))
+    assert got == [("Slice", "tp", 1, None)]
+
+
+def test_noop():
+    assert steps(P, P) == []
+
+
+def test_push_partialsum_rejected():
+    with pytest.raises(MatchError):
+        match(ShardSpec(), ShardSpec.make({}, partial=("tp",)))
+
+
+# ---- property: matcher always lands exactly on the consumer layout -------
+AXES = ("dp", "tp", "cp")
+
+
+@st.composite
+def shard_specs(draw, rank=3, allow_partial=True):
+    part = {}
+    partial = []
+    for ax in AXES:
+        mode = draw(st.integers(0, 4 if allow_partial else 3))
+        if mode == 4:
+            partial.append(ax)
+        elif mode > 0:
+            part.setdefault(draw(st.integers(0, rank - 1)), []).append(ax)
+    return ShardSpec.make({k: tuple(v) for k, v in part.items()},
+                          tuple(partial))
+
+
+@given(shard_specs(), shard_specs(allow_partial=False))
+@settings(max_examples=300, deadline=None)
+def test_match_reaches_consumer(prod, cons):
+    cur = prod
+    for step in match(prod, cons):
+        cur = _apply_step(cur, step)
+    assert _canon(cur) == _canon(cons)
+
+
+@given(shard_specs(), shard_specs(allow_partial=False))
+@settings(max_examples=300, deadline=None)
+def test_match_step_count_bounded(prod, cons):
+    # at most one collective per mesh axis + one local slice per axis
+    assert len(match(prod, cons)) <= 2 * len(AXES)
+
+
+@given(shard_specs())
+@settings(max_examples=100, deadline=None)
+def test_match_identity_is_empty(spec):
+    assert match(spec, spec) == []

@@ -1,0 +1,77 @@
+"""Multi-device semantics checks (run in a subprocess with 8 placeholder
+devices so the main pytest process keeps its single real device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+
+    from repro.core import ModelSpec, MoESpec
+    from repro.models import RuntimeCfg, init_params
+    from repro.models import layers as L
+    from repro.models.common import AxisRules
+    from repro.parallel.sharding import logical_rules, param_shardings
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+    spec = ModelSpec(name="m", n_layers=2, d_model=64, n_heads=4,
+                     n_kv_heads=4, d_ff=128, vocab=256,
+                     moe=MoESpec(8, 2, 0, 32))
+    # capacity high enough that no token ever drops: both paths must then
+    # agree exactly (drop SETS legitimately differ at finite capacity
+    # because local capacity quantizes per shard)
+    rt = RuntimeCfg(attention_impl="naive", moe_capacity=8.0)
+    params = init_params(spec, rt, jax.random.PRNGKey(0))
+    moe_p = params["slots"][0]["moe"]
+    import jax.tree_util as jtu
+    moe_p = jtu.tree_map(lambda p: type(p)(p.value[0], p.axes[1:]), moe_p,
+                         is_leaf=lambda x: hasattr(x, "axes"))
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 64), jnp.float32) \\
+        .astype(jnp.bfloat16)
+
+    # 1. local (no-mesh) reference
+    ref = L.moe_ffn(moe_p, x, spec, rt, None)
+
+    # 2. shard_map EP path under the mesh
+    rules_d = logical_rules(sp=False, data_axes=("data",))
+    rules = AxisRules(rules_d)
+    rules.mesh = mesh
+    with jax.set_mesh(mesh):
+        out = jax.jit(lambda p, a: L.moe_ffn(p, a, spec, rt, rules))(moe_p, x)
+    err = float(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max())
+    scale = float(jnp.abs(ref.astype(jnp.float32)).max())
+    assert err < 0.05 * scale + 1e-2, f"moe shard_map mismatch: {err} vs {scale}"
+    print("MOE_EP_OK", err)
+
+    # 3. param shardings: divisibility fallback (kv_heads=4 doesn't divide
+    # model=4? it does; vocab=256 divides; check MQA fallback)
+    spec2 = ModelSpec(name="mqa", n_layers=1, d_model=64, n_heads=4,
+                      n_kv_heads=1, d_ff=128, vocab=250)
+    p2 = init_params(spec2, rt, jax.random.PRNGKey(0))
+    sh = param_shardings(p2, rules_d, mesh)
+    wk = sh["slots"][0]["attn"]["w_k"]
+    assert len(wk.spec) < 2 or wk.spec[1] is None, wk.spec  # kv=1 unsharded
+    emb = sh["embed"]
+    assert all(e != "model" for e in emb.spec), emb.spec    # 250 % 4 != 0
+    print("PSPEC_OK")
+""")
+
+
+@pytest.mark.slow
+def test_multidevice_semantics():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MOE_EP_OK" in r.stdout and "PSPEC_OK" in r.stdout, r.stdout
