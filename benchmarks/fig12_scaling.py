@@ -9,8 +9,8 @@ while comm time stays nearly constant; scalability plateaus at high TP.
 """
 import time
 
-from repro.core import TPU_V5E, generate, simulate
-from .paper_models import LLAMA3_70B, PALM_540B, cfg
+from repro import Scenario, TPU_V5E
+from .paper_models import LLAMA3_70B, PALM_540B
 
 
 def run(report):
@@ -18,9 +18,10 @@ def run(report):
     t0 = time.time()
     comm_prev = None
     for dp in (4, 16, 64, 256):
-        c = cfg(dp=dp, tp=1, pp=4, microbatches=4)
-        w, *_ = generate(LLAMA3_70B, c, batch=8 * dp, seq=2048)
-        sim = simulate(w, TPU_V5E)
+        # weak scaling reuses one cached llama-70b assembly across dp points
+        sim = (Scenario(LLAMA3_70B).train(batch=8 * dp, seq=2048)
+               .parallel(dp=dp, pp=4, microbatches=4)
+               .trace().simulate(TPU_V5E))
         rows["dp_weak"].append({"dp": dp, "gpus": dp * 4,
                                 "compute_s": round(sim.compute_time, 3),
                                 "comm_s": round(sim.comm_time, 3),
@@ -41,9 +42,9 @@ def run(report):
 
     t0 = time.time()
     for tp in (4, 16, 64):
-        c = cfg(dp=4, tp=tp, sp=True, cp=4)
-        w, *_ = generate(PALM_540B, c, batch=64, seq=512)
-        sim = simulate(w, TPU_V5E)
+        sim = (Scenario(PALM_540B).train(batch=64, seq=512)
+               .parallel(dp=4, tp=tp, sp=True, cp=4)
+               .trace().simulate(TPU_V5E))
         rows["tp_strong"].append({"tp": tp, "gpus": 16 * tp,
                                   "compute_s": round(sim.compute_time, 4),
                                   "comm_s": round(sim.comm_time, 4)})

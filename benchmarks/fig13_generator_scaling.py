@@ -10,32 +10,37 @@ import os
 import tempfile
 import time
 
-from repro.core import export_ranks, generate
-from .paper_models import MIXTRAL_8X7B, PALM_540B, cfg
+from repro import Scenario
+from .paper_models import MIXTRAL_8X7B, PALM_540B
 
 
-def _cfg_for(world):
+def _scenario_for(spec, world):
     tp = 8
     pp = 8 if world >= 4096 else 4
     dp = world // (tp * pp)
-    return cfg(dp=dp, tp=tp, sp=True, pp=pp, microbatches=8)
+    return Scenario(spec).train(batch=dp * 8, seq=2048).parallel(
+        dp=dp, tp=tp, sp=True, pp=pp, microbatches=8,
+        ep=spec.moe is not None)
 
 
 def run(report):
     rows = []
     for spec, name in ((PALM_540B, "palm-540b"), (MIXTRAL_8X7B, "mixtral")):
+        # warm the (spec, mode) graph cache so every world size times the
+        # same path (clone + distribute + instantiate); otherwise the
+        # first row alone would pay the one-off symbolic assembly and the
+        # scaling curve would mix cold and warm measurements
+        _scenario_for(spec, 512).builder()
         for world in (512, 2048, 8192, 32768):
-            c = _cfg_for(world)
-            if spec.moe:
-                c.ep_axis = c.dp_axis
+            sc = _scenario_for(spec, world)
             t0 = time.time()
-            w, g, plan, env = generate(spec, c, batch=c.degree("dp") * 8,
-                                       seq=2048)
+            tr = sc.trace()
+            w = tr.workload        # cached clone + distribute + instantiate
             gen_s = time.time() - t0
             # measure stamping rate on 64 ranks, extrapolate
             with tempfile.TemporaryDirectory() as d:
                 t1 = time.time()
-                export_ranks(w, d, ranks=range(64))
+                tr.export_chakra(d, ranks=range(64))
                 stamp_s = (time.time() - t1) / 64 * world
             total = gen_s + stamp_s
             rows.append({"model": name, "gpus": world,

@@ -11,16 +11,15 @@ Reproduced observations (asserted):
 """
 import time
 
-from repro.core import H100_HGX, bind_env, build_graph
-from repro.core.dse import sweep
+from repro import H100_HGX, Scenario
 from .paper_models import LLAMA32_1B, PALM_540B, SEQ
 
 
 def _sweep(spec, batch, world, seq, **kw):
-    def build():
-        return build_graph(spec, mode="train").graph
-    env = bind_env(spec, batch=batch, seq=seq)
-    return sweep(build, env, world, H100_HGX, n_layers=spec.n_layers, **kw)
+    # one symbolic assembly per sweep: every config point re-distributes
+    # a clone of the cached (spec, mode) graph
+    return Scenario(spec).train(batch=batch, seq=seq).sweep(
+        world, H100_HGX, **kw)
 
 
 def run(report):

@@ -4,7 +4,7 @@ Configs follow the NeMo/Megatron presets the paper's cluster ran
 (§V-A); seq lengths are the framework defaults (2048 GPT-3 era, 8192
 LLaMA-3, 4096 Mixtral/DeepSeek).
 """
-from repro.core import MLASpec, ModelSpec, MoESpec, ParallelCfg
+from repro.core import MLASpec, ModelSpec, MoESpec
 
 GPT3_5B = ModelSpec(name="gpt3-5b", n_layers=24, d_model=4096, n_heads=32,
                     n_kv_heads=32, d_ff=16384, vocab=51200, gated_ffn=False)
@@ -44,20 +44,12 @@ SEQ = {"gpt3-5b": 2048, "gpt3-175b": 2048, "llama3-70b": 2048,
        "llama3.2-1b": 4096, "palm-540b": 2048}
 
 
-def cfg(dp=1, tp=1, pp=1, ep=None, sp=False, fsdp=False, zero1=False,
-        cp=1, microbatches=1) -> ParallelCfg:
-    axes = {}
-    if dp > 1:
-        axes["dp"] = dp
-    if tp > 1:
-        axes["tp"] = tp
-    if cp > 1:
-        axes["cp"] = cp
-    return ParallelCfg(
-        axes=axes,
-        dp_axis="dp" if dp > 1 else None,
-        tp_axis="tp" if tp > 1 else None,
-        cp_axis="cp" if cp > 1 else None,
-        sp=sp and tp > 1,
-        ep_axis="dp" if (ep and dp > 1) else None,
-        fsdp=fsdp, zero1=zero1, pp=pp, microbatches=microbatches)
+def par(**kw) -> dict:
+    """Keyword set for :meth:`repro.Scenario.parallel`.
+
+    The benchmark cells were written against NeMo/Megatron presets where
+    sequence parallelism is an explicit switch, while ``.parallel()``
+    turns SP on by default whenever ``tp > 1`` — so cells that model a
+    no-SP preset pin ``sp=False`` here."""
+    kw.setdefault("sp", False)
+    return kw

@@ -15,37 +15,40 @@ import json
 import os
 import time
 
+from repro import Scenario
 from repro.configs import SHAPES, get
-from repro.core import ParallelCfg, generate
 
 COLL_MAP = {"all-gather": "AllGather", "all-reduce": "AllReduce",
             "reduce-scatter": "ReduceScatter", "all-to-all": "AllToAll"}
 
 
-def _core_cfg(arch, mesh_tag: str) -> ParallelCfg:
+def _scenario(arch, mesh_tag: str) -> Scenario:
     multi = mesh_tag.startswith("2x")
-    axes = {"dp": 32 if multi else 16, "tp": 16}
     spec = arch.spec
     kv_ok = spec.n_kv_heads % 16 == 0 and spec.block != "mla"
     grp_ok = (max(1, spec.n_heads // max(1, spec.n_kv_heads)) % 16 == 0)
     fsdp = (spec.moe is not None) or not (kv_ok or grp_ok
                                           or spec.block in ("mla", "rwkv6"))
-    return ParallelCfg(axes=axes, dp_axis="dp", tp_axis="tp", sp=True,
-                       ep_axis="tp" if spec.moe else None, fsdp=fsdp,
-                       zero1=True)
+    # MoE archs route experts over the tensor axis here, mirroring the
+    # runtime's shard_map EP path on the production mesh's model axis
+    return Scenario(spec).parallel(dp=32 if multi else 16, tp=16, sp=True,
+                                   ep="tp" if spec.moe else False,
+                                   fsdp=fsdp, zero1=True)
 
 
 def predict(arch_name: str, shape_name: str, mesh_tag: str) -> dict:
     arch = get(arch_name)
     shp = SHAPES[shape_name]
-    cfg = _core_cfg(arch, mesh_tag)
-    mode = {"train": "train", "prefill": "prefill", "decode": "decode"}[shp.kind]
-    kv = shp.seq_len if shp.kind == "decode" else None
-    seq = 1 if shp.kind == "decode" else shp.seq_len
-    w, *_ = generate(arch.spec, cfg, batch=shp.global_batch, seq=seq,
-                     kv_len=kv, mode=mode)
+    sc = _scenario(arch, mesh_tag)
+    if shp.kind == "train":
+        sc = sc.train(batch=shp.global_batch, seq=shp.seq_len)
+    elif shp.kind == "decode":
+        sc = sc.decode(batch=shp.global_batch, kv_len=shp.seq_len)
+    else:
+        sc = sc.prefill(batch=shp.global_batch, seq=shp.seq_len)
+    w = sc.trace().workload
     flops = w.total_flops()
-    if mode == "train":
+    if shp.kind == "train":
         # the runtime rematerializes the forward during backward
         fwd = sum(n.flops * n.repeat for n in w.stage_nodes(0)
                   if n.phase == "fwd" and n.category != "Comm")

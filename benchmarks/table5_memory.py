@@ -6,39 +6,36 @@ compare our tensor-lifetime memory model against the paper's numbers
 is the direct reproduction target)."""
 import time
 
-from repro.core import bind_env, build_graph, distribute, apply_pipeline, \
-    peak_memory, total_layers
+from repro import Scenario
 from .paper_models import (GPT3_5B, GPT3_175B, LLAMA3_70B, MIXTRAL_8X7B,
-                           MIXTRAL_144E, SEQ, cfg)
+                           MIXTRAL_144E, SEQ, par)
 
-# (spec, cfg, micro_batch, paper_measured_GB, paper_synth_GB, recompute)
-# recompute=True where NeMo presets enable activation recomputation (the
-# paper's number is otherwise unreachable: FSDP mb=8 alone has >60GB of
-# raw activations by napkin math)
+# (spec, parallel kwargs, micro_batch, paper_measured_GB, paper_synth_GB,
+# recompute) — recompute=True where NeMo presets enable activation
+# recomputation (the paper's number is otherwise unreachable: FSDP mb=8
+# alone has >60GB of raw activations by napkin math)
 CELLS = [
-    (GPT3_5B, cfg(dp=8, fsdp=True, zero1=True), 8, 18.1, 16.1, True),
-    (GPT3_5B, cfg(tp=8, sp=True), 1, 15.4, 13.7, False),
-    (GPT3_5B, cfg(pp=8, microbatches=128), 1, 17.5, 15.2, False),
-    (GPT3_175B, cfg(tp=32, sp=True), 1, 118.9, 115.2, False),
-    (LLAMA3_70B, cfg(tp=16, sp=True), 1, 94.3, 92.1, False),
-    (MIXTRAL_8X7B, cfg(dp=8, tp=4, ep=8, pp=4, microbatches=128), 1, 15.8, 16.07, True),
-    (MIXTRAL_8X7B, cfg(dp=8, ep=8, pp=4, microbatches=128), 1, 56.8, 58.55, False),
-    (MIXTRAL_144E, cfg(dp=16, tp=2, ep=16), 1, 26.6, 27.4, True),
+    (GPT3_5B, par(dp=8, fsdp=True, zero1=True), 8, 18.1, 16.1, True),
+    (GPT3_5B, par(tp=8, sp=True), 1, 15.4, 13.7, False),
+    (GPT3_5B, par(pp=8, microbatches=128), 1, 17.5, 15.2, False),
+    (GPT3_175B, par(tp=32, sp=True), 1, 118.9, 115.2, False),
+    (LLAMA3_70B, par(tp=16, sp=True), 1, 94.3, 92.1, False),
+    (MIXTRAL_8X7B, par(dp=8, tp=4, ep=True, pp=4, microbatches=128), 1, 15.8, 16.07, True),
+    (MIXTRAL_8X7B, par(dp=8, ep=True, pp=4, microbatches=128), 1, 56.8, 58.55, False),
+    (MIXTRAL_144E, par(dp=16, tp=2, ep=True), 1, 26.6, 27.4, True),
 ]
 
 
 def run(report):
     rows = []
-    for spec, c, mb, measured, synth, recompute in CELLS:
+    for spec, pkw, mb, measured, synth, recompute in CELLS:
         t0 = time.time()
         seq = SEQ[spec.name]
-        dp = c.degree(c.dp_axis)
-        env = bind_env(spec, batch=mb * max(1, dp), seq=seq)
-        g = build_graph(spec, mode="train").graph
-        distribute(g, c, env)
-        plan = apply_pipeline(g, c.pp, total_layers(spec))
-        m = peak_memory(g, c, env, plan, recompute=recompute,
-                        master_fp32=False)
+        dp = pkw.get("dp", 1)
+        sc = Scenario(spec).train(batch=mb * max(1, dp),
+                                  seq=seq).parallel(**pkw)
+        c = sc.cfg
+        m = sc.trace().memory(recompute=recompute, master_fp32=False)
         ours = m.peak_gb
         rows.append({
             "model": spec.name, "parallel": c.describe(), "micro_batch": mb,

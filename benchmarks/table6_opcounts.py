@@ -14,23 +14,24 @@ in the paper's own §V-C:
 """
 import time
 
-from repro.core import generate
+from repro import Scenario
 from .paper_models import (GPT3_5B, GPT3_175B, LLAMA3_70B, MIXTRAL_8X7B,
-                           DEEPSEEK_MOE, SEQ, cfg)
+                           DEEPSEEK_MOE, SEQ, par)
 
-# (spec, cfg, microbatch, batch, paper synthesized per-epoch counts)
+# (spec, parallel kwargs, microbatch, batch, paper synthesized per-epoch
+# counts)
 CELLS = [
-    (GPT3_5B, cfg(tp=8, sp=True), 1, 128,
+    (GPT3_5B, par(tp=8, sp=True), 1, 128,
      {"GeMM": 37632, "Attn": 6144, "AllGather": 18432, "ReduceScatter": 12288,
       "AllReduce": 256}),
-    (GPT3_5B, cfg(dp=8, fsdp=True, zero1=True), 8, 128,
+    (GPT3_5B, par(dp=8, fsdp=True, zero1=True), 8, 128,
      {"GeMM": 4704, "Attn": 768, "AllGather": 768, "ReduceScatter": 384,
       "AllReduce": 32}),
-    (LLAMA3_70B, cfg(tp=8), 1, 128,
+    (LLAMA3_70B, par(tp=8), 1, 128,
      {"GeMM": 49920, "Attn": 8192, "AllReduce": 16640}),
-    (MIXTRAL_8X7B, cfg(dp=8, ep=8, pp=4, microbatches=128), 1, 128,
+    (MIXTRAL_8X7B, par(dp=8, ep=True, pp=4, microbatches=128), 1, 128,
      {"GeMM": 1968, "Attn": 256, "AllToAll": 512}),
-    (DEEPSEEK_MOE, cfg(dp=8, ep=8), 1, 128,
+    (DEEPSEEK_MOE, par(dp=8, ep=True), 1, 128,
      {"GeMM": 25632, "Attn": 896, "AllToAll": 1792}),
 ]
 
@@ -55,15 +56,15 @@ def _fused_counts(w, spec):
 
 def run(report):
     rows = []
-    for spec, c, mb, batch, paper in CELLS:
+    for spec, pkw, mb, batch, paper in CELLS:
         t0 = time.time()
         steps = batch // mb            # microbatch iterations per epoch
-        dp = max(1, c.degree(c.dp_axis))
-        w, g, plan, env = generate(
-            spec, c, batch=mb * dp,
-            seq=SEQ[spec.name])
-        ops = w.op_counts()
-        comms = w.comm_counts()
+        dp = max(1, pkw.get("dp", 1))
+        tr = Scenario(spec).train(batch=mb * dp,
+                                  seq=SEQ[spec.name]).parallel(**pkw).trace()
+        c, w = tr.scenario.cfg, tr.workload
+        ops = tr.op_counts()
+        comms = tr.comm_counts()
         per_epoch = {}
         mult = steps // max(1, c.microbatches if c.pp > 1 else 1)
         for k, v in {**ops, **comms}.items():

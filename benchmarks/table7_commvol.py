@@ -5,43 +5,43 @@ affect the communication volume"), so this is the cleanest quantitative
 reproduction target in the paper."""
 import time
 
-from repro.core import generate
+from repro import Scenario
 from .paper_models import (GPT3_5B, GPT3_175B, LLAMA3_70B, MIXTRAL_8X7B,
-                           SEQ, cfg)
+                           SEQ, par)
 
 MB = 1e6   # the paper reports decimal MB
 
-# (spec, cfg, mb, batch, paper synthesized volumes in MB)
+# (spec, parallel kwargs, mb, batch, paper synthesized volumes in MB)
 CELLS = [
-    (GPT3_5B, cfg(tp=8, sp=True), 1, 128,
+    (GPT3_5B, par(tp=8, sp=True), 1, 128,
      {"AllReduce": 1073.742, "AllGather": 19327.353,
       "ReduceScatter": 103079.215}),
-    (GPT3_5B, cfg(pp=8, microbatches=128), 1, 128,
+    (GPT3_5B, par(pp=8, microbatches=128), 1, 128,
      {"SendRecv": 2 * 1073.742, "AllReduce": 206.045}),
-    (GPT3_5B, cfg(dp=8, fsdp=True, zero1=True), 8, 128,
+    (GPT3_5B, par(dp=8, fsdp=True, zero1=True), 8, 128,
      {"AllGather": 20401.095, "ReduceScatter": 78383.153}),
-    (GPT3_175B, cfg(tp=32, sp=True), 1, 128,
+    (GPT3_175B, par(tp=32, sp=True), 1, 128,
      {"AllReduce": 805.306, "AllGather": 14495.515,
       "ReduceScatter": 309237.645}),
-    (LLAMA3_70B, cfg(tp=8), 1, 128,
+    (LLAMA3_70B, par(tp=8), 1, 128,
      {"AllReduce": 587068.342}),
-    (MIXTRAL_8X7B, cfg(dp=8, ep=8, pp=4, microbatches=128), 1, 128,
+    (MIXTRAL_8X7B, par(dp=8, ep=True, pp=4, microbatches=128), 1, 128,
      {"SendRecv": 2 * 19327.353}),
 ]
 
 
 def run(report):
     rows = []
-    for spec, c, mb, batch, paper in CELLS:
+    for spec, pkw, mb, batch, paper in CELLS:
         t0 = time.time()
         steps = batch // mb
-        dp = max(1, c.degree(c.dp_axis))
-        w, *_ = generate(spec, c,
-                         batch=mb * dp,
-                         seq=SEQ[spec.name])
+        dp = max(1, pkw.get("dp", 1))
+        tr = Scenario(spec).train(batch=mb * dp,
+                                  seq=SEQ[spec.name]).parallel(**pkw).trace()
+        c = tr.scenario.cfg
         mult = steps // max(1, c.microbatches if c.pp > 1 else 1)
         stage = 1 if c.pp > 1 else 0          # interior PP stage (paper: per-GPU)
-        vol = {k: v * mult / MB for k, v in w.comm_volume(stage=stage).items()}
+        vol = {k: v * mult / MB for k, v in tr.comm_volume(stage=stage).items()}
         if "SendRecv" in vol:
             vol["SendRecv"] *= 2              # Kineto logs send + recv
         total_p = sum(paper.values())

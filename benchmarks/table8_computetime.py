@@ -6,24 +6,26 @@ per epoch against the paper's measured column and report the error the
 same way the paper does against its own hardware."""
 import time
 
-from repro.core import H100_HGX, generate
+from repro import H100_HGX, Scenario
 from repro.core.costmodel import compute_time
-from .paper_models import GPT3_5B, GPT3_175B, LLAMA3_70B, SEQ, cfg
+from .paper_models import GPT3_5B, GPT3_175B, LLAMA3_70B, SEQ, par
 
-# (spec, cfg, mb, batch, paper measured ms {GeMM, Attn})
+# (spec, parallel kwargs, mb, batch, paper measured ms {GeMM, Attn})
 CELLS = [
-    (GPT3_5B, cfg(tp=8, sp=True), 1, 128, {"GeMM": 2187.0, "Attn": 210.8}),
-    (GPT3_175B, cfg(tp=32, sp=True), 1, 128, {"GeMM": 3719.4, "Attn": 444.1}),
-    (LLAMA3_70B, cfg(tp=8), 1, 128, {"GeMM": 12156.5, "Attn": 5126.3}),
+    (GPT3_5B, par(tp=8, sp=True), 1, 128, {"GeMM": 2187.0, "Attn": 210.8}),
+    (GPT3_175B, par(tp=32, sp=True), 1, 128, {"GeMM": 3719.4, "Attn": 444.1}),
+    (LLAMA3_70B, par(tp=8), 1, 128, {"GeMM": 12156.5, "Attn": 5126.3}),
 ]
 
 
 def run(report):
     rows = []
-    for spec, c, mb, batch, paper in CELLS:
+    for spec, pkw, mb, batch, paper in CELLS:
         t0 = time.time()
-        dp = max(1, c.degree(c.dp_axis))
-        w, *_ = generate(spec, c, batch=mb * dp, seq=SEQ[spec.name])
+        dp = max(1, pkw.get("dp", 1))
+        tr = Scenario(spec).train(batch=mb * dp,
+                                  seq=SEQ[spec.name]).parallel(**pkw).trace()
+        c, w = tr.scenario.cfg, tr.workload
         steps = batch // mb
         t = {"GeMM": 0.0, "Attn": 0.0, "ElementWise": 0.0, "Others": 0.0}
         for n in w.stage_nodes(0):

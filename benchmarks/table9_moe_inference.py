@@ -7,33 +7,28 @@ pipeline at three cluster partitions with a fixed aggregate batch of
 2048 and report analytic step time + throughput per GPU."""
 import time
 
+from repro import H100_HGX, Scenario
 from repro.configs import get
-from repro.core import H100_HGX, ParallelCfg, generate, simulate
 
 PREFILL_TOKENS = 1024        # context per request (paper: ~1k avg)
 
 
-def _cfg(gpus: int, ep: int) -> ParallelCfg:
-    return ParallelCfg(axes={"dp": gpus}, dp_axis="dp", ep_axis="dp")
-
-
 def run(report):
-    spec = get("deepseek-v2-236b").spec
+    sc = Scenario(get("deepseek-v2-236b").spec)
     rows = []
     # cluster sizes adapted to divide E=160 (the paper's 36/72/144 GPU
     # partitions assume fractional experts/GPU; our EP shards evenly)
     for gpus in (10, 40, 160):
         batch = 13 * gpus   # ~2048 aggregate at 160 GPUs, evenly shardable
         t0 = time.time()
+        ep = sc.parallel(dp=gpus, ep=True)
         # decode: one token against a 1k context
-        w, *_ = generate(spec, _cfg(gpus, gpus), batch=batch, seq=1,
-                         kv_len=PREFILL_TOKENS, mode="decode")
-        dec = simulate(w, H100_HGX)
+        dec = ep.decode(batch=batch,
+                        kv_len=PREFILL_TOKENS).trace().simulate(H100_HGX)
         dec_tput = batch / dec.step_time / gpus
         # prefill
-        wp, *_ = generate(spec, _cfg(gpus, gpus), batch=batch,
-                          seq=PREFILL_TOKENS, mode="prefill")
-        pre = simulate(wp, H100_HGX)
+        pre = ep.prefill(batch=batch,
+                         seq=PREFILL_TOKENS).trace().simulate(H100_HGX)
         pre_tput = batch * PREFILL_TOKENS / pre.step_time / gpus
         rows.append({"gpus": gpus, "batch": batch,
                      "decode_ms": round(dec.ms, 2),

@@ -2,18 +2,17 @@
 
 Sweeps every power-of-two (dp, tp, cp, pp) factorization of a 64-chip
 system for a 7B-class model and prints the Pareto view STAGE enables.
+The whole sweep assembles the symbolic graph exactly once; each config
+point re-distributes its own cached clone.
 
     PYTHONPATH=src python examples/dse_sweep.py
 """
-from repro.core import ModelSpec, TPU_V5E, bind_env, build_graph
-from repro.core.dse import sweep
+from repro import ModelSpec, Scenario, TPU_V5E, graph_cache_stats
 
 spec = ModelSpec(name="demo-7b", n_layers=32, d_model=4096, n_heads=32,
                  n_kv_heads=8, d_ff=11008, vocab=32000)
-env = bind_env(spec, batch=64, seq=2048)
-pts = sweep(lambda: build_graph(spec, mode="train").graph, env, 64, TPU_V5E,
-            n_layers=spec.n_layers, max_tp=16, max_pp=8, max_cp=4,
-            microbatches=4)
+pts = Scenario(spec).train(batch=64, seq=2048).sweep(
+    64, TPU_V5E, max_tp=16, max_pp=8, max_cp=4, microbatches=4)
 print(f"{'strategy':34s} {'step ms':>9s} {'peak GB':>8s} {'overlap':>8s}")
 for p in pts[:18]:
     r = p.row()
@@ -23,3 +22,5 @@ for p in pts[:18]:
 fit = [p for p in pts if p.peak_gb <= 16]
 if fit:
     print(f"\nbest fitting 16GB HBM: {fit[0].label} @ {fit[0].step_ms:.1f} ms")
+print(f"\n{len(pts)} points from {graph_cache_stats()['builds']} "
+      f"symbolic assembly(ies)")

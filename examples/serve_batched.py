@@ -6,12 +6,18 @@ import numpy as np
 import jax
 
 from repro.core import ModelSpec
+from repro.launch.preflight import announce, preflight
 from repro.models import RuntimeCfg, init_params
 from repro.serve import Engine, Request
 
 spec = ModelSpec(name="serve-demo", n_layers=4, d_model=128, n_heads=4,
                  n_kv_heads=2, d_ff=512, vocab=4096)
 rt = RuntimeCfg(attention_impl="naive")
+try:
+    announce("serve", preflight(spec, mode="decode", batch=4, seq=1,
+                                kv_len=128))
+except Exception as e:  # noqa: BLE001 — advisory only, never blocks
+    print(f"[serve] STAGE pre-flight unavailable: {e}")
 params = init_params(spec, rt, jax.random.PRNGKey(0))
 
 engine = Engine(spec, rt, params, batch_slots=4, kv_len=128)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.ckpt import CheckpointManager
 from repro.core import ModelSpec
 from repro.data import DataCfg, TokenPipeline
+from repro.launch.preflight import announce, preflight
 from repro.ft import StragglerWatchdog
 from repro.models import RuntimeCfg, init_params
 from repro.train import OptCfg, init_opt_state, make_train_step
@@ -41,6 +42,13 @@ def main():
     rt = RuntimeCfg(attention_impl="chunked", attn_chunk=128)
     n_params = spec.params()
     print(f"model: {n_params/1e6:.1f}M params")
+    # symbolic pre-flight: what does the analytic model expect this
+    # training step to cost?  (pure sympy, runs before any compile)
+    try:
+        announce("train_lm", preflight(spec, mode="train", batch=args.batch,
+                                       seq=args.seq))
+    except Exception as e:  # noqa: BLE001 — advisory only, never blocks
+        print(f"[train_lm] STAGE pre-flight unavailable: {e}")
 
     pipe = TokenPipeline(DataCfg(global_batch=args.batch, seq_len=args.seq,
                                  vocab=args.vocab, seed=0))

@@ -1,0 +1,27 @@
+"""STAGE reproduction: symbolic tensor graph generation for distributed
+AI system co-design, plus a jax/pallas runtime that executes the same
+model families.
+
+Front door — the fluent pipeline API (see :mod:`repro.api`):
+
+    from repro import Scenario, TPU_V5E
+
+    trace = (Scenario(spec)
+             .train(batch=64, seq=2048)
+             .parallel(dp=8, tp=4)
+             .trace())
+    trace.simulate(TPU_V5E).ms, trace.memory().peak_gb
+
+Lower-level pieces stay importable from :mod:`repro.core` (the symbolic
+pipeline), :mod:`repro.models` / :mod:`repro.launch` (the jax runtime).
+``repro.core.generate()`` is deprecated in favor of ``Scenario``.
+"""
+from .api import Scenario, Trace, clear_graph_cache, graph_cache_stats
+from .core import (H100_HGX, TPU_V5E, HardwareProfile, MLASpec, ModelSpec,
+                   MoESpec, ParallelCfg, SSMSpec)
+
+__all__ = [
+    "Scenario", "Trace", "graph_cache_stats", "clear_graph_cache",
+    "ModelSpec", "MoESpec", "MLASpec", "SSMSpec", "ParallelCfg",
+    "HardwareProfile", "TPU_V5E", "H100_HGX",
+]

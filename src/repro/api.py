@@ -1,0 +1,373 @@
+"""Fluent front-door for the STAGE pipeline: ``Scenario`` -> ``Trace``.
+
+The paper's value (§IV, Fig 3) is a staged pipeline — assemble ->
+distribute -> pipeline-cut -> instantiate -> {simulate, memory, chakra}
+— but wiring it by hand means plumbing mesh axis names through
+:class:`~repro.core.distribute.ParallelCfg` and re-assembling the
+symbolic graph for every parallel config even though assembly only
+depends on ``(spec, mode)``.  This module packages the pipeline behind
+two objects:
+
+* :class:`Scenario` — an immutable builder describing WHAT to model:
+  the target :class:`~repro.core.assemble.ModelSpec`, the workload shape
+  (``.train(batch=64, seq=2048)`` / ``.serve(batch=8, kv_len=4096)``)
+  and the parallelization (``.parallel(dp=8, tp=4, pp=2, fsdp=True)``
+  — mesh and axis names are constructed for you).
+
+* :class:`Trace` — a lazy handle over one scenario's generated pipeline:
+  ``.workload``, ``.graph``, ``.plan``, ``.env`` materialize on first
+  access and everything downstream (``.simulate(hw)``, ``.memory()``,
+  ``.export_chakra(dir)``, ``.op_counts()``) is memoized.
+
+Assembled symbolic graphs are cached process-wide per ``(spec, mode)``
+and every trace/config receives its own mutable
+:meth:`~repro.core.stg.Graph.clone` (distribution mutates in place).
+:meth:`Scenario.sweep` — the DSE entrypoint replacing
+``dse.enumerate_configs`` + a manual loop — therefore performs exactly
+one symbolic assembly per mode for the whole sweep (Fig 8/13 hot path).
+
+    from repro import Scenario, TPU_V5E
+
+    trace = (Scenario(spec)
+             .train(batch=64, seq=2048)
+             .parallel(dp=8, tp=4, sp=True, zero1=True)
+             .trace())
+    trace.op_counts()            # Table VI per-GPU op counts
+    trace.simulate(TPU_V5E).ms   # analytic step time
+    trace.memory().peak_gb       # Table V peak memory
+    points = Scenario(spec).train(batch=64, seq=2048).sweep(world=64)
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Optional
+
+from .core.assemble import ModelSpec, bind_env, build_graph, total_layers
+from .core.chakra import export_ranks, export_stage
+from .core.costmodel import HardwareProfile, TPU_V5E
+from .core.distribute import DistReport, ParallelCfg, distribute
+from .core.dse import DSEPoint
+from .core.dse import sweep as dse_sweep
+from .core.graphdist import PipelinePlan, apply_pipeline
+from .core.instantiate import Workload, instantiate
+from .core.memory import MemoryReport, peak_memory
+from .core.simulate import SimResult, simulate
+from .core.stg import Graph, GraphBuilder
+from .core.symbolic import Env
+
+__all__ = ["Scenario", "Trace", "graph_cache_stats", "clear_graph_cache"]
+
+
+# --------------------------------------------------------------------------
+# Process-wide cache of pristine assembled graphs
+# --------------------------------------------------------------------------
+
+class _GraphCache:
+    """LRU of pristine (never-distributed) builders keyed by (spec, mode).
+
+    ModelSpec is a frozen dataclass (hashable), so the key is the full
+    model description; entries are handed out only as clones."""
+
+    def __init__(self, maxsize: int = 8):
+        self.maxsize = maxsize
+        self._store: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.builds = 0          # cold assemblies (the Scenario.sweep spy)
+        self.hits = 0
+
+    def builder(self, spec: ModelSpec, mode: str) -> GraphBuilder:
+        key = (spec, mode)
+        with self._lock:
+            hit = self._store.get(key)
+            if hit is not None:
+                self._store.move_to_end(key)
+                self.hits += 1
+                return hit
+        built = build_graph(spec, mode=mode)
+        with self._lock:
+            self.builds += 1
+            self._store[key] = built
+            while len(self._store) > self.maxsize:
+                self._store.popitem(last=False)
+        return built
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+            self.builds = 0
+            self.hits = 0
+
+
+_cache = _GraphCache()
+
+
+def graph_cache_stats() -> dict:
+    """{'size', 'builds', 'hits'} of the process-wide (spec, mode) cache."""
+    return {"size": len(_cache._store), "builds": _cache.builds,
+            "hits": _cache.hits}
+
+
+def clear_graph_cache() -> None:
+    _cache.clear()
+
+
+# --------------------------------------------------------------------------
+# Scenario
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Scenario:
+    """Immutable description of one STAGE run; fluent methods return
+    updated copies, so partial scenarios can be shared and branched."""
+
+    spec: ModelSpec
+    mode: str = "train"                     # train | prefill | decode
+    batch: int = 1
+    seq: int = 1
+    kv_len: Optional[int] = None
+    cfg: ParallelCfg = field(default_factory=ParallelCfg)
+    name: Optional[str] = None
+
+    def __post_init__(self):
+        if self.mode not in ("train", "prefill", "decode"):
+            raise ValueError(f"mode {self.mode!r} not in train|prefill|decode")
+
+    # ---- workload shape -------------------------------------------------
+    def train(self, *, batch: int, seq: int) -> "Scenario":
+        """Training step: fwd + bwd + optimizer over [batch, seq] tokens."""
+        return replace(self, mode="train", batch=batch, seq=seq, kv_len=None)
+
+    def serve(self, *, batch: int, seq: int = 1,
+              kv_len: Optional[int] = None) -> "Scenario":
+        """Inference: ``seq == 1`` is a decode step against a ``kv_len``
+        cache; ``seq > 1`` is prefill (kv_len defaults to seq)."""
+        mode = "decode" if seq == 1 else "prefill"
+        return replace(self, mode=mode, batch=batch, seq=seq, kv_len=kv_len)
+
+    def prefill(self, *, batch: int, seq: int) -> "Scenario":
+        return self.serve(batch=batch, seq=seq)
+
+    def decode(self, *, batch: int, kv_len: int) -> "Scenario":
+        return self.serve(batch=batch, seq=1, kv_len=kv_len)
+
+    # ---- parallelization ------------------------------------------------
+    def parallel(self, *, dp: int = 1, tp: int = 1, pp: int = 1, cp: int = 1,
+                 ep=False, sp: Optional[bool] = None,
+                 fsdp: bool = False, zero1: bool = False,
+                 microbatches: int = 1) -> "Scenario":
+        """Pick a point in the strategy space (paper §II-B / Table III).
+
+        Mesh axes and their names are constructed here — no axis-name
+        plumbing.  ``sp`` defaults to on whenever ``tp > 1`` (Megatron
+        sequence parallelism); ``ep=True`` routes experts over the dp
+        axis (tokens<->experts AllToAll) and ``ep="tp"`` over the tensor
+        axis; options whose axis is degenerate (``fsdp``/``zero1``/``ep``
+        at degree 1) quietly turn off, which keeps sweep-style
+        enumeration free of special cases."""
+        axes: dict[str, int] = {}
+        if dp > 1:
+            axes["dp"] = dp
+        if tp > 1:
+            axes["tp"] = tp
+        if cp > 1:
+            axes["cp"] = cp
+        ep_axis = None
+        if ep:
+            ep_axis = ep if isinstance(ep, str) else "dp"
+            if ep_axis not in axes:
+                ep_axis = None
+        cfg = ParallelCfg(
+            axes=axes,
+            dp_axis="dp" if dp > 1 else None,
+            tp_axis="tp" if tp > 1 else None,
+            cp_axis="cp" if cp > 1 else None,
+            sp=(tp > 1) if sp is None else bool(sp and tp > 1),
+            ep_axis=ep_axis,
+            fsdp=bool(fsdp and dp > 1),
+            zero1=bool(zero1 and dp > 1),
+            pp=pp, microbatches=microbatches)
+        return replace(self, cfg=cfg)
+
+    def with_cfg(self, cfg: ParallelCfg) -> "Scenario":
+        """Escape hatch: adopt a hand-built :class:`ParallelCfg`."""
+        return replace(self, cfg=cfg)
+
+    def named(self, name: str) -> "Scenario":
+        return replace(self, name=name)
+
+    # ---- derived --------------------------------------------------------
+    @property
+    def world(self) -> int:
+        return self.cfg.world
+
+    def env(self) -> Env:
+        return bind_env(self.spec, batch=self.batch, seq=self.seq,
+                        kv_len=self.kv_len)
+
+    def describe(self) -> str:
+        return (f"{self.spec.name}/{self.mode} b={self.batch} s={self.seq}"
+                + (f" kv={self.kv_len}" if self.kv_len else "")
+                + f" [{self.cfg.describe()}]")
+
+    # ---- pipeline -------------------------------------------------------
+    def builder(self) -> GraphBuilder:
+        """A private mutable clone of the cached pristine assembly."""
+        return _cache.builder(self.spec, self.mode).clone()
+
+    def trace(self) -> "Trace":
+        return Trace(self)
+
+    def sweep(self, world: int, hw: HardwareProfile = TPU_V5E, *,
+              mem_limit_gb: Optional[float] = None, recompute: bool = False,
+              **enum_kw) -> list[DSEPoint]:
+        """One-shot DSE over every strategy for ``world`` devices (Fig 8).
+
+        Enumerates power-of-two (dp, tp, cp, pp)[+FSDP] factorizations
+        (``enum_kw`` forwards to
+        :func:`repro.core.dse.enumerate_configs`: ``max_tp``, ``max_pp``,
+        ``max_cp``, ``with_fsdp``, ``ep``, ``microbatches``), runs
+        distribute -> pipeline-cut -> instantiate -> simulate + memory per
+        point on a clone of ONE cached assembly, and returns points
+        sorted by step time (infeasible factorizations skipped).
+        Delegates the loop to :func:`repro.core.dse.sweep` with a
+        cache-cloning ``build``."""
+        src = _cache.builder(self.spec, self.mode)      # one assembly/mode
+        return dse_sweep(lambda: src.clone().graph, self.env(), world, hw,
+                         n_layers=total_layers(self.spec),
+                         mem_limit_gb=mem_limit_gb, recompute=recompute,
+                         name=self.spec.name, **enum_kw)
+
+
+# --------------------------------------------------------------------------
+# Trace
+# --------------------------------------------------------------------------
+
+class Trace:
+    """Lazy, memoized handle over one scenario's generated pipeline.
+
+    Nothing runs at construction; ``.graph`` triggers clone + distribute
+    + pipeline-cut, ``.workload`` additionally instantiates, and each
+    analysis (:meth:`simulate`, :meth:`memory`) is cached per argument
+    set.  A Trace owns its graph clone — mutating it never affects the
+    cache or other traces."""
+
+    def __init__(self, scenario: Scenario):
+        self.scenario = scenario
+        self._env: Optional[Env] = None
+        self._graph: Optional[Graph] = None
+        self._plan: Optional[PipelinePlan] = None
+        self._dist_report: Optional[DistReport] = None
+        self._workload: Optional[Workload] = None
+        self._sim: dict = {}
+        self._mem: dict = {}
+
+    # ---- pipeline stages (lazy) ----------------------------------------
+    @property
+    def env(self) -> Env:
+        if self._env is None:
+            self._env = self.scenario.env()
+        return self._env
+
+    @property
+    def graph(self) -> Graph:
+        if self._graph is None:
+            sc = self.scenario
+            graph = sc.builder().graph
+            self._dist_report = distribute(graph, sc.cfg, self.env)
+            self._plan = apply_pipeline(graph, sc.cfg.pp,
+                                        total_layers(sc.spec))
+            self._graph = graph
+        return self._graph
+
+    @property
+    def plan(self) -> PipelinePlan:
+        _ = self.graph
+        return self._plan
+
+    @property
+    def dist_report(self) -> DistReport:
+        _ = self.graph
+        return self._dist_report
+
+    @property
+    def workload(self) -> Workload:
+        if self._workload is None:
+            sc = self.scenario
+            name = sc.name or f"{sc.spec.name}/{sc.mode}"
+            self._workload = instantiate(self.graph, sc.cfg, self.env,
+                                         self.plan, name=name)
+        return self._workload
+
+    # ---- analyses (memoized) -------------------------------------------
+    @staticmethod
+    def _hw_key(hw: HardwareProfile) -> tuple:
+        # content-based: two profiles sharing a name (e.g. via
+        # dataclasses.replace what-ifs) must not share a cache slot
+        return (hw.name, hw.peak_flops, hw.hbm_bw, hw.link_bw,
+                tuple(sorted(hw.link_bw_axis.items())), hw.link_latency,
+                tuple(sorted(hw.efficiency.items())), hw.mem_capacity)
+
+    def simulate(self, hw: HardwareProfile = TPU_V5E, *,
+                 recompute: bool = False) -> SimResult:
+        key = (self._hw_key(hw), recompute)
+        if key not in self._sim:
+            self._sim[key] = simulate(self.workload, hw, recompute=recompute)
+        return self._sim[key]
+
+    def memory(self, *, stage: int = 0, recompute: bool = False,
+               master_fp32: bool = True,
+               grad_dtype: str = "fp32") -> MemoryReport:
+        key = (stage, recompute, master_fp32, grad_dtype)
+        if key not in self._mem:
+            self._mem[key] = peak_memory(
+                self.graph, self.scenario.cfg, self.env, self.plan,
+                stage=stage, recompute=recompute, master_fp32=master_fp32,
+                grad_dtype=grad_dtype)
+        return self._mem[key]
+
+    # ---- workload summaries (paper tables) -----------------------------
+    def op_counts(self, stage: int = 0) -> dict:
+        return self.workload.op_counts(stage)
+
+    def comm_counts(self, stage: int = 0) -> dict:
+        return self.workload.comm_counts(stage)
+
+    def comm_volume(self, stage: int = 0) -> dict:
+        return self.workload.comm_volume(stage)
+
+    def flops_by_category(self, stage: int = 0) -> dict:
+        return self.workload.flops_by_category(stage)
+
+    def total_flops(self, stage: int = 0) -> float:
+        return self.workload.total_flops(stage)
+
+    # ---- export ---------------------------------------------------------
+    def export_chakra(self, out_dir: str,
+                      ranks: Optional[Iterable[int]] = None, *,
+                      decompose_alltoall: bool = False) -> int:
+        """Write per-rank Chakra-schema JSON traces; returns file count."""
+        return export_ranks(self.workload, out_dir, ranks,
+                            decompose_alltoall=decompose_alltoall)
+
+    def chakra_stage(self, stage: int = 0, *,
+                     decompose_alltoall: bool = False) -> dict:
+        return export_stage(self.workload, stage,
+                            decompose_alltoall=decompose_alltoall)
+
+    # ---- one-line report (launch pre-flight) ----------------------------
+    def summary(self, hw: HardwareProfile = TPU_V5E, *,
+                recompute: bool = False) -> dict:
+        sim = self.simulate(hw, recompute=recompute)
+        mem = self.memory(recompute=recompute)
+        return {"scenario": self.scenario.describe(), "hw": hw.name,
+                "world": self.scenario.world,
+                "step_ms": round(sim.ms, 3),
+                "overlap": round(sim.overlap_ratio, 3),
+                "exposed_comm_ms": round(sim.exposed_comm * 1e3, 3),
+                "peak_gb": round(mem.peak_gb, 2)}
+
+    def __repr__(self) -> str:
+        state = "materialized" if self._workload is not None else "lazy"
+        return f"Trace({self.scenario.describe()}, {state})"

@@ -32,11 +32,20 @@ __all__ = [
 
 def generate(spec: ModelSpec, cfg: ParallelCfg, *, batch: int, seq: int,
              kv_len=None, mode: str = "train", name=None) -> tuple:
-    """One-call STAGE pipeline: returns (workload, graph, plan, env)."""
-    env = bind_env(spec, batch=batch, seq=seq, kv_len=kv_len)
-    builder = build_graph(spec, mode=mode)
-    graph = builder.graph
-    distribute(graph, cfg, env)
-    plan = apply_pipeline(graph, cfg.pp, total_layers(spec))
-    w = instantiate(graph, cfg, env, plan, name=name or f"{spec.name}/{mode}")
-    return w, graph, plan, env
+    """One-call STAGE pipeline: returns (workload, graph, plan, env).
+
+    .. deprecated::
+        Use :class:`repro.Scenario` — same pipeline behind a fluent
+        builder, with assembled graphs cached per (spec, mode).  This
+        shim routes through it, so the legacy 4-tuple results stay
+        bit-identical and old scripts keep reproducing.
+    """
+    import warnings
+
+    from ..api import Scenario
+    warnings.warn("repro.core.generate() is deprecated; use "
+                  "repro.Scenario(spec).train(...)/.serve(...).trace()",
+                  DeprecationWarning, stacklevel=2)
+    tr = Scenario(spec, mode=mode, batch=batch, seq=seq, kv_len=kv_len,
+                  cfg=cfg, name=name).trace()
+    return tr.workload, tr.graph, tr.plan, tr.env

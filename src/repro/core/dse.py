@@ -5,6 +5,12 @@ full STAGE pipeline (assemble → distribute → pipeline-cut → instantiate)
 for each point, and scores it with the analytical simulator + memory
 model.  This doubles as the runtime framework's auto-parallelism
 advisor: rank configurations before compiling anything.
+
+The preferred entrypoint is :meth:`repro.api.Scenario.sweep`, which
+calls :func:`sweep` with a ``build`` that clones ONE cached symbolic
+assembly per mode; the callable-based :func:`sweep` stays public for
+callers that need a custom ``build`` (a plain
+``lambda: build_graph(spec).graph`` re-assembles per point).
 """
 from __future__ import annotations
 
@@ -104,12 +110,13 @@ def evaluate_point(build: Callable[[], tuple], cfg: ParallelCfg, env: Env,
 def sweep(build: Callable[[], tuple], env: Env, world: int,
           hw: HardwareProfile = TPU_V5E, *, n_layers: int,
           mem_limit_gb: Optional[float] = None,
-          recompute: bool = False, **enum_kw) -> list[DSEPoint]:
+          recompute: bool = False, name: str = "dse",
+          **enum_kw) -> list[DSEPoint]:
     points = []
     for cfg in enumerate_configs(world, **enum_kw):
         try:
             pt = evaluate_point(build, cfg, env, hw, n_layers=n_layers,
-                                recompute=recompute)
+                                recompute=recompute, name=name)
         except Exception:
             continue                      # infeasible factorization
         if mem_limit_gb is not None and pt.peak_gb > mem_limit_gb:

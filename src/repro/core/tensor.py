@@ -179,6 +179,24 @@ class STensor:
     def with_spec(self, spec: ShardSpec) -> "STensor":
         return dataclasses.replace(self, spec=spec, uid=_next_uid())
 
+    def clone(self) -> "STensor":
+        """Structural copy with a fresh uid, sharing the immutable payload
+        (sympy shape expressions, ShardSpec).  Bypasses ``__post_init__``
+        so cloning never re-sympifies shapes; the producer link is dropped
+        (:meth:`repro.core.stg.Graph.clone` re-attaches it)."""
+        t = object.__new__(STensor)
+        t.name = self.name
+        t.shape = self.shape
+        t.dtype = self.dtype
+        t.kind = self.kind
+        t.spec = self.spec
+        t.producer = None
+        t.uid = _next_uid()
+        roles = self.__dict__.get("roles")
+        if roles is not None:
+            t.roles = dict(roles)
+        return t
+
     def like(self, name: str, spec: ShardSpec | None = None, kind: str | None = None) -> "STensor":
         return STensor(name, self.shape, self.dtype,
                        kind or self.kind, spec if spec is not None else self.spec)

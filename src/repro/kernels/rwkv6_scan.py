@@ -25,6 +25,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref,
                 state_scr, *, chunk: int):
@@ -112,7 +116,7 @@ def wkv6_bhsd(r, k, v, w, u, state0, *, chunk: int = 64,
             jax.ShapeDtypeStruct((b, h, dd, dd), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((dd, dd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u, state0)

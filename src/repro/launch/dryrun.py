@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import SHAPES, Arch, get as get_arch, ARCHS
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import data_axes_of, make_production_mesh
+from repro.launch.preflight import preflight
 from repro.models import lm
 from repro.models.common import AxisRules, Param, RuntimeCfg
 from repro.parallel.sharding import (logical_rules, param_pspec,
@@ -247,6 +248,20 @@ def analyze(arch: Arch, shape_name: str, compiled, mesh, *,
     return rec
 
 
+def stage_predict(arch: Arch, shape_name: str, *, multi_pod: bool = False,
+                  fsdp: bool = False, zero1: bool = True) -> dict:
+    """Symbolic STAGE estimate for one dry-run cell (Scenario pipeline):
+    predicted step time / peak memory on the production mesh, recorded
+    next to the XLA-measured numbers for fidelity tracking.  Mirrors the
+    runtime strategy: experts shard over the model ("tp") axis like the
+    shard_map EP path, and optimizer state follows ``rt.zero1``."""
+    shp = SHAPES[shape_name]
+    return preflight(arch.spec, mode=shp.kind, batch=shp.global_batch,
+                     seq=shp.seq_len, dp=32 if multi_pod else 16, tp=16,
+                     sp=True, fsdp=fsdp, zero1=zero1,
+                     ep="tp" if arch.spec.moe is not None else False)
+
+
 def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
              out_path: str, rt: Optional[RuntimeCfg] = None,
              label: str = "") -> dict:
@@ -263,6 +278,13 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
             rec = analyze(arch, shape_name, compiled, mesh,
                           wall_s=time.time() - t0)
             rec["status"] = "OK"
+            try:
+                rec["stage_predict"] = stage_predict(
+                    arch, shape_name, multi_pod=multi_pod,
+                    fsdp=bool(meta.get("fsdp")),
+                    zero1=(rt or RuntimeCfg(remat="full")).zero1)
+            except Exception as e:  # noqa: BLE001 — advisory only
+                rec["stage_predict"] = {"error": f"{type(e).__name__}: {e}"}
             del lowered, compiled
         except Exception as e:  # noqa: BLE001 — record and continue sweep
             rec = {"arch": arch_name, "shape": shape_name,

@@ -8,6 +8,7 @@ import jax
 import numpy as np
 
 from repro.configs import get as get_arch
+from repro.launch.preflight import announce, preflight
 from repro.models import RuntimeCfg, init_params
 from repro.serve import Engine, Request
 
@@ -25,6 +26,13 @@ def main():
     arch = get_arch(args.arch)
     spec = arch.smoke if args.smoke else arch.spec
     rt = RuntimeCfg(attention_impl="naive")
+    try:
+        announce("serve", preflight(spec, mode="decode", batch=args.slots,
+                                    seq=1, kv_len=args.kv_len,
+                                    dp=jax.device_count(),
+                                    ep=spec.moe is not None))
+    except Exception as e:  # noqa: BLE001 — advisory only, never blocks
+        print(f"[serve] STAGE pre-flight unavailable: {e}")
     params = init_params(spec, rt, jax.random.PRNGKey(0))
     engine = Engine(spec, rt, params, batch_slots=args.slots,
                     kv_len=args.kv_len)

@@ -17,6 +17,7 @@ from repro.ckpt import CheckpointManager
 from repro.configs import get as get_arch
 from repro.data import DataCfg, TokenPipeline
 from repro.ft import StragglerWatchdog
+from repro.launch.preflight import announce, preflight
 from repro.models import RuntimeCfg, init_params
 from repro.train import OptCfg, init_opt_state, make_train_step
 
@@ -36,6 +37,12 @@ def main():
     rt = RuntimeCfg(attention_impl="chunked", attn_chunk=max(64, args.seq))
     print(f"training {spec.name}: {spec.params()/1e6:.1f}M params, "
           f"{jax.device_count()} devices")
+    try:
+        announce("train", preflight(spec, mode="train", batch=args.batch,
+                                    seq=args.seq, dp=jax.device_count(),
+                                    ep=spec.moe is not None))
+    except Exception as e:  # noqa: BLE001 — advisory only, never blocks
+        print(f"[train] STAGE pre-flight unavailable: {e}")
 
     pipe = TokenPipeline(DataCfg(global_batch=args.batch, seq_len=args.seq,
                                  vocab=spec.vocab, seed=0,

@@ -1,0 +1,193 @@
+"""Scenario/Trace fluent API tests: golden equivalence against the
+legacy primitive pipeline, graph-cache reuse (the one-assembly-per-sweep
+property), fluent semantics, and the deprecated generate() shim."""
+import warnings
+
+import pytest
+
+import repro.api as api
+from repro import ModelSpec, ParallelCfg, Scenario, TPU_V5E
+from repro.core import (MoESpec, apply_pipeline, bind_env, build_graph,
+                        distribute, generate, instantiate, peak_memory,
+                        simulate, total_layers)
+
+GPT = ModelSpec(name="gptish", n_layers=4, d_model=256, n_heads=8,
+                n_kv_heads=4, d_ff=512, vocab=4096)
+MOE = ModelSpec(name="moeish", n_layers=2, d_model=128, n_heads=4,
+                n_kv_heads=4, d_ff=256, vocab=512,
+                moe=MoESpec(8, 2, 2, 64))
+
+
+def legacy_pipeline(spec, cfg, *, batch, seq, kv_len=None, mode="train"):
+    """The pre-Scenario call sequence, from primitives (no caching)."""
+    env = bind_env(spec, batch=batch, seq=seq, kv_len=kv_len)
+    g = build_graph(spec, mode=mode).graph
+    distribute(g, cfg, env)
+    plan = apply_pipeline(g, cfg.pp, total_layers(spec))
+    w = instantiate(g, cfg, env, plan, name=f"{spec.name}/{mode}")
+    return w, g, plan, env
+
+
+# ---- golden equivalence: new API == legacy path --------------------------
+
+@pytest.mark.parametrize("spec,par,cfg", [
+    (GPT,
+     dict(dp=2, tp=2, sp=True, zero1=True),
+     ParallelCfg(axes={"dp": 2, "tp": 2}, dp_axis="dp", tp_axis="tp",
+                 sp=True, zero1=True)),
+    (GPT,
+     dict(dp=2, pp=2, microbatches=4, fsdp=True),
+     ParallelCfg(axes={"dp": 2}, dp_axis="dp", fsdp=True, pp=2,
+                 microbatches=4)),
+    (MOE,
+     dict(dp=4, ep=True),
+     ParallelCfg(axes={"dp": 4}, dp_axis="dp", ep_axis="dp")),
+], ids=["gpt-tp-sp-zero1", "gpt-pp-fsdp", "moe-ep"])
+def test_trace_matches_legacy_train(spec, par, cfg):
+    tr = Scenario(spec).train(batch=8, seq=64).parallel(**par).trace()
+    w, g, plan, env = legacy_pipeline(spec, cfg, batch=8, seq=64)
+    assert tr.op_counts() == w.op_counts()
+    assert tr.comm_counts() == w.comm_counts()
+    assert tr.comm_volume() == w.comm_volume()
+    assert tr.total_flops() == w.total_flops()
+    legacy_mem = peak_memory(g, cfg, env, plan)
+    assert abs(tr.memory().peak_bytes - legacy_mem.peak_bytes) < 1e-6
+    assert tr.simulate(TPU_V5E).step_time == simulate(w, TPU_V5E).step_time
+
+
+def test_trace_matches_legacy_decode():
+    tr = Scenario(GPT).decode(batch=4, kv_len=256).parallel(dp=2).trace()
+    cfg = ParallelCfg(axes={"dp": 2}, dp_axis="dp")
+    w, *_ = legacy_pipeline(GPT, cfg, batch=4, seq=1, kv_len=256,
+                            mode="decode")
+    assert tr.op_counts() == w.op_counts()
+    assert tr.comm_counts() == w.comm_counts()
+    assert tr.total_flops() == w.total_flops()
+
+
+# ---- the sweep hot path: one symbolic assembly per mode ------------------
+
+def test_sweep_assembles_graph_exactly_once(monkeypatch):
+    real_build = api.build_graph
+    calls = []
+
+    def spy(spec, *, mode="train", **kw):
+        calls.append((spec.name, mode))
+        return real_build(spec, mode=mode, **kw)
+
+    monkeypatch.setattr(api, "build_graph", spy)
+    api.clear_graph_cache()
+    pts = Scenario(GPT).train(batch=32, seq=64).sweep(
+        world=16, max_tp=4, microbatches=2)
+    assert len(pts) >= 16                 # a real sweep, not a toy
+    assert calls == [("gptish", "train")]  # ONE assembly for all points
+    stats = api.graph_cache_stats()
+    assert stats["builds"] == 1
+    api.clear_graph_cache()
+
+
+def test_trace_reuses_cached_assembly(monkeypatch):
+    real_build = api.build_graph
+    calls = []
+
+    def spy(spec, *, mode="train", **kw):
+        calls.append(mode)
+        return real_build(spec, mode=mode, **kw)
+
+    monkeypatch.setattr(api, "build_graph", spy)
+    api.clear_graph_cache()
+    sc = Scenario(GPT).train(batch=8, seq=64)
+    w1 = sc.parallel(dp=2).trace().workload
+    w2 = sc.parallel(dp=2, fsdp=True).trace().workload
+    assert len(calls) == 1                # second config hits the cache
+    assert w1.comm_counts() != w2.comm_counts()   # but is distributed anew
+    api.clear_graph_cache()
+
+
+def test_traces_do_not_share_graphs():
+    sc = Scenario(GPT).train(batch=8, seq=64).parallel(dp=2)
+    t1, t2 = sc.trace(), sc.trace()
+    assert t1.graph is not t2.graph
+    uids = {op.uid for op in t1.graph.ops}
+    assert uids.isdisjoint({op.uid for op in t2.graph.ops})
+
+
+# ---- fluent semantics ----------------------------------------------------
+
+def test_scenario_immutability():
+    sc = Scenario(GPT)
+    sc2 = sc.train(batch=8, seq=64)
+    assert sc.batch == 1 and sc2.batch == 8
+    with pytest.raises(AttributeError):
+        sc.batch = 4                      # frozen dataclass
+
+
+def test_serve_mode_inference():
+    assert Scenario(GPT).serve(batch=4, kv_len=128).mode == "decode"
+    assert Scenario(GPT).serve(batch=4, seq=128).mode == "prefill"
+    assert Scenario(GPT).decode(batch=4, kv_len=64).kv_len == 64
+    with pytest.raises(ValueError):
+        Scenario(GPT, mode="bogus")
+
+
+def test_parallel_builds_mesh():
+    cfg = Scenario(GPT).parallel(dp=4, tp=2, cp=2, pp=2, fsdp=True,
+                                 zero1=True).cfg
+    assert cfg.axes == {"dp": 4, "tp": 2, "cp": 2}
+    assert (cfg.dp_axis, cfg.tp_axis, cfg.cp_axis) == ("dp", "tp", "cp")
+    assert cfg.sp                          # SP defaults on with TP
+    assert cfg.fsdp and cfg.zero1 and cfg.pp == 2
+    assert cfg.world == 32
+
+
+def test_parallel_degrades_degenerate_axes():
+    cfg = Scenario(GPT).parallel(tp=4, fsdp=True, zero1=True, ep=True).cfg
+    assert cfg.dp_axis is None and not cfg.fsdp and not cfg.zero1
+    assert cfg.ep_axis is None
+    assert Scenario(GPT).parallel(tp=4, sp=False).cfg.sp is False
+    assert Scenario(MOE).parallel(tp=4, ep="tp").cfg.ep_axis == "tp"
+
+
+def test_trace_is_lazy_and_memoized():
+    tr = Scenario(GPT).train(batch=8, seq=64).parallel(dp=2).trace()
+    assert tr._workload is None            # nothing ran yet
+    w = tr.workload
+    assert tr.workload is w                # memoized
+    assert tr.graph is tr.graph
+    assert tr.simulate(TPU_V5E) is tr.simulate(TPU_V5E)
+    assert tr.memory() is tr.memory()
+    assert tr.memory(recompute=True) is not tr.memory()
+
+
+def test_summary_shape():
+    s = (Scenario(GPT).train(batch=8, seq=64).parallel(dp=2, tp=2)
+         .trace().summary(TPU_V5E))
+    assert set(s) >= {"scenario", "hw", "world", "step_ms", "peak_gb",
+                      "overlap"}
+    assert s["world"] == 4 and s["step_ms"] > 0
+
+
+# ---- deprecated shim -----------------------------------------------------
+
+def test_generate_shim_warns_and_matches():
+    cfg = ParallelCfg(axes={"dp": 2}, dp_axis="dp")
+    with pytest.warns(DeprecationWarning):
+        w, g, plan, env = generate(GPT, cfg, batch=8, seq=64)
+    tr = Scenario(GPT).train(batch=8, seq=64).parallel(dp=2).trace()
+    assert w.op_counts() == tr.op_counts()
+    assert w.comm_counts() == tr.comm_counts()
+    assert plan.pp == 1 and env is not None and g.ops
+
+
+# ---- satellite regression: einsum out_shape_hint -------------------------
+
+def test_einsum_out_shape_hint_threaded():
+    from repro.core.stg import GraphBuilder
+    from repro.core.symbolic import sym
+    b = GraphBuilder()
+    x = b.input("x", (sym("B"), sym("H")))
+    w = b.weight("w", (sym("H"),))
+    # output letter 'k' appears in no input: only the hint can bind it
+    out = b.einsum("proj", "bh,h->bk", [x, w],
+                   out_shape_hint={"b": sym("B"), "k": sym("K")})
+    assert out.shape == (sym("B"), sym("K"))

@@ -1,57 +1,50 @@
 """End-to-end STAGE core tests: distribution patterns, counting
-invariants, memory model, pipeline cut, Chakra export."""
+invariants, memory model, pipeline cut, Chakra export — all through the
+fluent Scenario/Trace API."""
 import json
-import os
 
 import pytest
-import sympy as sp
 
-from repro.core import (MLASpec, ModelSpec, MoESpec, ParallelCfg, SSMSpec,
-                        TPU_V5E, bind_env, build_graph, distribute,
-                        export_ranks, export_stage, generate, peak_memory,
-                        simulate, total_layers)
+from repro import Scenario, TPU_V5E
+from repro.core import MLASpec, ModelSpec, MoESpec, SSMSpec
 
 TINY = ModelSpec(name="tiny", n_layers=4, d_model=256, n_heads=8,
                  n_kv_heads=4, d_ff=512, vocab=4096)
 
 
-def gen(cfg, spec=TINY, **kw):
-    return generate(spec, cfg, batch=8, seq=64, **kw)
+def gen(spec=TINY, batch=8, seq=64, **par):
+    return Scenario(spec).train(batch=batch, seq=seq).parallel(**par).trace()
 
 
 # ---- the paper's core claim: comm patterns emerge per strategy -----------
 
 def test_dp_allreduce_only():
-    w, *_ = gen(ParallelCfg(axes={"dp": 4}, dp_axis="dp"))
-    counts = w.comm_counts()
+    tr = gen(dp=4)
+    counts = tr.comm_counts()
     assert counts.get("AllReduce", 0) > 0
     assert counts.get("ReduceScatter", 0) == 0
     # one grad AllReduce per weight tensor (DDP)
-    n_weights = len([x for x in w.nodes if x.kind == "Update"])
+    n_weights = len([x for x in tr.workload.nodes if x.kind == "Update"])
     assert counts["AllReduce"] >= n_weights
 
 
 def test_tp_sp_uses_rs_ag():
-    w, *_ = gen(ParallelCfg(axes={"dp": 2, "tp": 2}, dp_axis="dp",
-                            tp_axis="tp", sp=True))
-    c = w.comm_counts()
+    c = gen(dp=2, tp=2, sp=True).comm_counts()
     assert c.get("ReduceScatter", 0) > 0 and c.get("AllGather", 0) > 0
 
 
 def test_tp_no_sp_uses_allreduce():
-    w, *_ = gen(ParallelCfg(axes={"dp": 2, "tp": 2}, dp_axis="dp",
-                            tp_axis="tp", sp=False))
-    c = w.comm_counts()
+    c = gen(dp=2, tp=2, sp=False).comm_counts()
     assert c.get("AllReduce", 0) > 0
 
 
 def test_fsdp_gathers_params_scatters_grads():
-    w, *_ = gen(ParallelCfg(axes={"dp": 4}, dp_axis="dp", fsdp=True))
-    c = w.comm_counts()
+    tr = gen(dp=4, fsdp=True)
+    c = tr.comm_counts()
     assert c.get("AllGather", 0) > 0 and c.get("ReduceScatter", 0) > 0
     # grads are never AllReduced under pure FSDP (they're reduce-scattered);
     # small non-divisible weights may still AllReduce
-    vol = w.comm_volume()
+    vol = tr.comm_volume()
     assert vol["ReduceScatter"] > 0.5 * vol.get("AllReduce", 1)
 
 
@@ -59,19 +52,16 @@ def test_ep_produces_alltoall():
     spec = ModelSpec(name="moe", n_layers=2, d_model=128, n_heads=4,
                      n_kv_heads=4, d_ff=256, vocab=512,
                      moe=MoESpec(8, 2, 2, 64))
-    w, *_ = generate(spec, ParallelCfg(axes={"dp": 4}, dp_axis="dp",
-                                       ep_axis="dp"), batch=8, seq=32)
-    c = w.comm_counts()
+    c = gen(spec, batch=8, seq=32, dp=4, ep=True).comm_counts()
     # dispatch + combine per MoE layer, fwd and bwd
     assert c.get("AllToAll", 0) >= 2 * spec.n_layers
 
 
 def test_pp_sendrecv_count():
-    cfg = ParallelCfg(axes={"dp": 2}, dp_axis="dp", pp=2, microbatches=4)
-    w, g, plan, env = gen(cfg)
-    c = w.comm_counts(stage=0)
+    tr = gen(dp=2, pp=2, microbatches=4)
+    c = tr.comm_counts(stage=0)
     assert c.get("SendRecv", 0) >= 1          # activation fwd + grad bwd
-    assert w.stages == 2
+    assert tr.workload.stages == 2
 
 
 # ---- counting invariants ---------------------------------------------------
@@ -80,9 +70,8 @@ def test_flops_conserved_across_sharding():
     """GeMM/Attn FLOPs x devices are invariant under DP sharding.
     (ElementWise is NOT: DDP redundantly runs the optimizer update on
     every replica — a real effect the model captures.)"""
-    w1, *_ = gen(ParallelCfg(axes={"dp": 1}, dp_axis=None))
-    w4, *_ = gen(ParallelCfg(axes={"dp": 4}, dp_axis="dp"))
-    f1, f4 = w1.flops_by_category(), w4.flops_by_category()
+    f1 = gen(dp=1).flops_by_category()
+    f4 = gen(dp=4).flops_by_category()
     for cat in ("GeMM", "Attn"):
         assert abs(f1[cat] - 4 * f4[cat]) / f1[cat] < 1e-9, cat
     # redundant optimizer work shows up as extra ElementWise
@@ -90,7 +79,7 @@ def test_flops_conserved_across_sharding():
 
 
 def test_train_has_bwd_and_opt():
-    w, *_ = gen(ParallelCfg(axes={"dp": 2}, dp_axis="dp"))
+    w = gen(dp=2).workload
     phases = {n.phase for n in w.nodes}
     assert phases == {"fwd", "bwd", "opt"}
     # bwd GeMM count ~ 2x fwd GeMM count (dX + dW per matmul)
@@ -100,74 +89,57 @@ def test_train_has_bwd_and_opt():
 
 
 def test_decode_flops_linear_in_kv():
-    cfg = ParallelCfg(axes={"dp": 2}, dp_axis="dp")
-    w1, *_ = generate(TINY, cfg, batch=4, seq=1, kv_len=128, mode="decode")
-    w2, *_ = generate(TINY, cfg, batch=4, seq=1, kv_len=256, mode="decode")
-    attn1 = w1.flops_by_category().get("Attn", 0)
-    attn2 = w2.flops_by_category().get("Attn", 0)
-    assert 1.8 < attn2 / attn1 < 2.2
+    sc = Scenario(TINY).parallel(dp=2)
+    f1 = sc.decode(batch=4, kv_len=128).trace().flops_by_category()
+    f2 = sc.decode(batch=4, kv_len=256).trace().flops_by_category()
+    assert 1.8 < f2.get("Attn", 0) / f1.get("Attn", 1) < 2.2
     # non-attention flops identical
-    g1 = w1.flops_by_category()["GeMM"]
-    g2 = w2.flops_by_category()["GeMM"]
-    assert abs(g1 - g2) / g1 < 1e-6
+    assert abs(f1["GeMM"] - f2["GeMM"]) / f1["GeMM"] < 1e-6
 
 
 def test_rwkv_decode_independent_of_context():
     spec = ModelSpec(name="rwkv", n_layers=2, d_model=128, n_heads=2,
                      n_kv_heads=2, d_ff=448, vocab=512, block="rwkv6",
                      d_head=64, rwkv_decay_rank=16)
-    cfg = ParallelCfg(axes={"dp": 2}, dp_axis="dp")
-    w1, *_ = generate(spec, cfg, batch=4, seq=1, kv_len=128, mode="decode")
-    w2, *_ = generate(spec, cfg, batch=4, seq=1, kv_len=4096, mode="decode")
-    assert abs(w1.total_flops() - w2.total_flops()) < 1e-6   # O(1) state
+    sc = Scenario(spec).parallel(dp=2)
+    t1 = sc.decode(batch=4, kv_len=128).trace().total_flops()
+    t2 = sc.decode(batch=4, kv_len=4096).trace().total_flops()
+    assert abs(t1 - t2) < 1e-6                               # O(1) state
 
 
 # ---- memory model -----------------------------------------------------------
 
 def test_fsdp_cuts_persistent_memory():
-    cfg_dp = ParallelCfg(axes={"dp": 4}, dp_axis="dp")
-    cfg_fs = ParallelCfg(axes={"dp": 4}, dp_axis="dp", fsdp=True)
-    _, g1, p1, e1 = gen(cfg_dp)
-    _, g2, p2, e2 = gen(cfg_fs)
-    m1 = peak_memory(g1, cfg_dp, e1, p1)
-    m2 = peak_memory(g2, cfg_fs, e2, p2)
+    m1 = gen(dp=4).memory()
+    m2 = gen(dp=4, fsdp=True).memory()
     assert m2.weights < 0.5 * m1.weights
     assert m2.opt_states < 0.5 * m1.opt_states
 
 
 def test_recompute_cuts_activation_memory():
-    cfg = ParallelCfg(axes={"dp": 2}, dp_axis="dp")
-    _, g, p, e = gen(cfg)
-    m0 = peak_memory(g, cfg, e, p, recompute=False)
-    m1 = peak_memory(g, cfg, e, p, recompute=True)
+    tr = gen(dp=2)
+    m0 = tr.memory(recompute=False)
+    m1 = tr.memory(recompute=True)
     assert m1.peak_activation < m0.peak_activation
 
 
 def test_pp_inflight_factor():
-    cfg = ParallelCfg(axes={"dp": 1}, pp=4, microbatches=8)
-    _, g, p, e = gen(cfg)
-    m = peak_memory(g, cfg, e, p, stage=0)
-    assert m.inflight_factor == 4
-    m_last = peak_memory(g, cfg, e, p, stage=3)
-    assert m_last.inflight_factor == 1
+    tr = gen(pp=4, microbatches=8)
+    assert tr.memory(stage=0).inflight_factor == 4
+    assert tr.memory(stage=3).inflight_factor == 1
 
 
 # ---- simulator --------------------------------------------------------------
 
 def test_sim_dp_scaling_reduces_compute():
     # large enough that compute dominates the alpha latency terms
-    t = {}
-    for dp in (1, 4):
-        cfg = ParallelCfg(axes={"dp": dp}, dp_axis="dp" if dp > 1 else None)
-        w, *_ = generate(TINY, cfg, batch=64, seq=256)
-        t[dp] = simulate(w, TPU_V5E).step_time
+    t = {dp: gen(batch=64, seq=256, dp=dp).simulate(TPU_V5E).step_time
+         for dp in (1, 4)}
     assert t[4] < t[1]
 
 
 def test_sim_overlap_between_zero_one():
-    cfg = ParallelCfg(axes={"dp": 4}, dp_axis="dp", fsdp=True)
-    w, *_ = gen(cfg)
-    r = simulate(w, TPU_V5E)
+    r = gen(dp=4, fsdp=True).simulate(TPU_V5E)
     assert 0.0 <= r.overlap_ratio <= 1.0
     assert r.step_time > 0
 
@@ -175,13 +147,11 @@ def test_sim_overlap_between_zero_one():
 # ---- chakra export ----------------------------------------------------------
 
 def test_chakra_export(tmp_path):
-    cfg = ParallelCfg(axes={"dp": 2, "tp": 2}, dp_axis="dp", tp_axis="tp",
-                      sp=True, pp=2, microbatches=2)
-    w, g, plan, env = gen(cfg)
-    trace = export_stage(w, 0)
+    tr = gen(dp=2, tp=2, sp=True, pp=2, microbatches=2)
+    trace = tr.chakra_stage(0)
     kinds = {n["type"] for n in trace["nodes"]}
     assert "COMP_NODE" in kinds and "COMM_COLL_NODE" in kinds
-    n = export_ranks(w, str(tmp_path), ranks=range(5))
+    n = tr.export_chakra(str(tmp_path), ranks=range(5))
     assert n == 5
     r0 = json.load(open(tmp_path / "rank0.json"))
     assert r0["rank"] == 0 and len(r0["nodes"]) > 10
@@ -211,9 +181,8 @@ def test_chakra_export(tmp_path):
               enc_seq=50),
 ], ids=lambda s: s.name)
 def test_family_pipeline(spec):
-    cfg = ParallelCfg(axes={"dp": 2, "tp": 2}, dp_axis="dp", tp_axis="tp",
-                      sp=True, ep_axis="dp" if spec.moe else None)
-    w, g, plan, env = generate(spec, cfg, batch=4, seq=32)
-    assert w.total_flops() > 0
-    assert all(n.flops >= 0 for n in w.nodes)
-    g.validate()
+    tr = gen(spec, batch=4, seq=32, dp=2, tp=2, sp=True,
+             ep=spec.moe is not None)
+    assert tr.total_flops() > 0
+    assert all(n.flops >= 0 for n in tr.workload.nodes)
+    tr.graph.validate()

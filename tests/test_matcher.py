@@ -1,7 +1,8 @@
 """Collective Communication Matcher unit tests (paper Table IV) +
 hypothesis property sweep over arbitrary producer/consumer layouts."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.matcher import CommStep, MatchError, _apply_step, _canon, match
 from repro.core.tensor import ShardSpec
