@@ -8,18 +8,34 @@ Reproduced observations (asserted):
      at small runtime cost;
  (b) for the small model, DP wins on *both* axes (no trade-off) and
      weight sharding barely matters.
+
+Plus the sweep-throughput acceptance for the compiled backend: a
+Fig-8/11-style DSE *study* (fixed world, all factorizations, three
+operating points — plain, grad-accumulated, recomputed) on the paper's
+GPT3-5B validation workload must run >= 10x faster than the reference
+sympy path (single cold engine, same machine).
 """
 import time
 
 from repro import H100_HGX, Scenario
-from .paper_models import LLAMA32_1B, PALM_540B, SEQ
+from .paper_models import GPT3_5B, LLAMA32_1B, PALM_540B, SEQ
 
 
 def _sweep(spec, batch, world, seq, **kw):
-    # one symbolic assembly per sweep: every config point re-distributes
-    # a clone of the cached (spec, mode) graph
+    # one symbolic assembly per sweep; with the compiled backend every
+    # config point replays a lambdified cost program (one distribute +
+    # lowering per structure class)
     return Scenario(spec).train(batch=batch, seq=seq).sweep(
         world, H100_HGX, **kw)
+
+
+def _study(sc, world, **kw):
+    """All factorizations evaluated at three operating points."""
+    n = 0
+    n += len(sc.sweep(world, H100_HGX, **kw))
+    n += len(sc.sweep(world, H100_HGX, microbatches=4, **kw))
+    n += len(sc.sweep(world, H100_HGX, recompute=True, **kw))
+    return n
 
 
 def run(report):
@@ -65,4 +81,28 @@ def run(report):
         "Fig 8b: DP wins memory too for small models"
     report("fig8/llama3.2-1b", (time.time() - t0) * 1e6,
            f"{len(pts)} configs; best={best.label} {best.step_ms:.0f}ms")
+
+    # --- compiled-backend sweep throughput (PR acceptance: >= 10x) -------
+    sc = Scenario(GPT3_5B).train(batch=64, seq=512)
+    sc.builder()                                   # warm assembly for both
+    t0 = time.time()
+    n_sym = _study(sc.with_backend("sympy"), 64,
+                   max_tp=64, max_pp=16, max_cp=1)
+    t_sym = time.time() - t0
+    t0 = time.time()
+    n_cmp = _study(sc, 64, max_tp=64, max_pp=16, max_cp=1)   # cold engine
+    t_cmp = time.time() - t0
+    assert n_sym == n_cmp
+    speedup = t_sym / t_cmp
+    rows["sweep_throughput"] = {
+        "model": "gpt3-5b", "world": 64, "points": n_cmp,
+        "sympy_s": round(t_sym, 2), "compiled_s": round(t_cmp, 2),
+        "sympy_pts_per_sec": round(n_sym / t_sym, 2),
+        "compiled_pts_per_sec": round(n_cmp / t_cmp, 2),
+        "speedup": round(speedup, 1)}
+    report("fig8/sweep-throughput", t_cmp * 1e6,
+           f"{n_cmp} pts: {n_cmp / t_cmp:.0f} pts/s compiled vs "
+           f"{n_sym / t_sym:.1f} sympy = {speedup:.1f}x")
+    assert speedup >= 10, \
+        f"compiled DSE study only {speedup:.1f}x vs sympy (target 10x)"
     return rows

@@ -1,0 +1,104 @@
+"""Perf smoke benchmark: compiled-backend speedups at CI-friendly size.
+
+Two machine-independent *ratios* are measured (and asserted), so a CI
+runner of any speed catches >2x regressions in either fast path:
+
+* **sweep** — a small Fig-8-style DSE study (fixed world, all
+  factorizations, three operating points: mb=1, mb=4, recompute) on the
+  reference sympy backend vs the compiled backend sharing one engine.
+* **export** — per-rank Chakra stamping with the pre-serialized splice
+  path vs the naive per-rank ``json.dump`` re-serialization it replaced.
+
+Returns the measured points/sec / ranks/sec so ``run.py --record`` can
+file them into a ``BENCH_<n>.json`` perf record.
+"""
+import json
+import os
+import tempfile
+import time
+
+from repro import Scenario
+from repro.core import ModelSpec
+from repro.core.chakra import export_stage, rank_coords
+
+SPEC = ModelSpec(name="perf-smoke", n_layers=4, d_model=256, n_heads=8,
+                 n_kv_heads=4, d_ff=512, vocab=4096)
+WORLD = 16
+
+# CI thresholds: intentionally far below the locally measured ratios
+# (see BENCH_*.json) so only genuine >2x regressions trip them.
+MIN_SWEEP_RATIO = 3.0
+MIN_EXPORT_RATIO = 2.0
+
+
+def _study(sc):
+    """Fig-8/11-style study: every factorization at three operating
+    points (plain, grad-accumulated, recomputed)."""
+    n = 0
+    n += len(sc.sweep(WORLD))
+    n += len(sc.sweep(WORLD, microbatches=4))
+    n += len(sc.sweep(WORLD, recompute=True))
+    return n
+
+
+def _naive_export(w, out_dir, ranks):
+    """The pre-PR export loop: re-serialize the stage dict per rank."""
+    per_stage = {s: export_stage(w, s) for s in range(w.stages)}
+    for rank in ranks:
+        coords = rank_coords(rank, w.cfg)
+        trace = dict(per_stage[coords["pp"]])
+        trace["rank"] = rank
+        trace["coords"] = coords
+        with open(os.path.join(out_dir, f"rank{rank}.json"), "w") as f:
+            json.dump(trace, f)
+
+
+def run(report):
+    sc = Scenario(SPEC).train(batch=16, seq=128)
+    sc.builder()                                   # warm assembly for both
+
+    t0 = time.time()
+    n_sym = _study(sc.with_backend("sympy"))
+    t_sym = time.time() - t0
+    t0 = time.time()
+    n_cmp = _study(sc)                             # cold engine
+    t_cmp = time.time() - t0
+    assert n_sym == n_cmp, (n_sym, n_cmp)
+    sweep_ratio = t_sym / t_cmp
+    report("perf_smoke/sweep", t_cmp * 1e6,
+           f"{n_cmp / t_cmp:.0f} pts/s compiled vs {n_sym / t_sym:.0f} "
+           f"sympy = {sweep_ratio:.1f}x")
+    assert sweep_ratio >= MIN_SWEEP_RATIO, \
+        f"compiled sweep only {sweep_ratio:.1f}x vs sympy " \
+        f"(floor {MIN_SWEEP_RATIO}x) — fast-path regression"
+
+    tr = sc.parallel(dp=16, tp=8, sp=True, pp=2, microbatches=2).trace()
+    w = tr.workload
+    ranks = range(w.cfg.world)                     # 256 ranks
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.time()
+        _naive_export(w, d, ranks)
+        t_naive = time.time() - t0
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.time()
+        tr.export_chakra(d, ranks=ranks)
+        t_stamp = time.time() - t0
+    export_ratio = t_naive / t_stamp
+    report("perf_smoke/export", t_stamp * 1e6,
+           f"{len(ranks) / t_stamp:.0f} ranks/s stamped vs "
+           f"{len(ranks) / t_naive:.0f} naive = {export_ratio:.1f}x")
+    assert export_ratio >= MIN_EXPORT_RATIO, \
+        f"pre-serialized export only {export_ratio:.1f}x vs naive " \
+        f"(floor {MIN_EXPORT_RATIO}x) — stamping regression"
+
+    return {
+        "sweep": {"points": n_cmp,
+                  "compiled_s": round(t_cmp, 3), "sympy_s": round(t_sym, 3),
+                  "compiled_pts_per_sec": round(n_cmp / t_cmp, 1),
+                  "sympy_pts_per_sec": round(n_sym / t_sym, 1),
+                  "speedup": round(sweep_ratio, 2)},
+        "export": {"ranks": len(ranks),
+                   "stamp_ranks_per_sec": round(len(ranks) / t_stamp, 1),
+                   "naive_ranks_per_sec": round(len(ranks) / t_naive, 1),
+                   "speedup": round(export_ratio, 2)},
+    }

@@ -1,13 +1,18 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows and writes the structured
-results to ``benchmarks/results.json``.
+results to ``benchmarks/results.json``.  ``--record`` additionally files
+the perf-relevant numbers (sweep points/sec, export ranks/sec, fig13
+generation totals) into the next free ``benchmarks/BENCH_<n>.json`` so
+speedups/regressions are tracked across PRs.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only table7,fig13]
+                                                [--record]
 """
 import argparse
 import json
 import os
+import platform
 import sys
 import time
 import traceback
@@ -15,7 +20,34 @@ import traceback
 BENCHES = ["table5_memory", "table6_opcounts", "table7_commvol",
            "table8_computetime", "table9_moe_inference", "fig8_dse",
            "fig12_scaling", "fig13_generator_scaling", "stg_vs_xla",
-           "roofline"]
+           "roofline", "perf_smoke"]
+
+
+def _perf_record(results: dict) -> dict:
+    """Extract the perf-tracking slice of the benchmark results."""
+    rec = {"host": {"platform": platform.platform(),
+                    "python": platform.python_version(),
+                    "cpus": os.cpu_count()},
+           "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S")}
+    smoke = results.get("perf_smoke")
+    if smoke:
+        rec["sweep_points_per_sec"] = smoke["sweep"]
+        rec["export_ranks_per_sec"] = smoke["export"]
+    fig8 = results.get("fig8_dse")
+    if isinstance(fig8, dict) and "sweep_throughput" in fig8:
+        rec["fig8_sweep_throughput"] = fig8["sweep_throughput"]
+    fig13 = results.get("fig13_generator_scaling")
+    if fig13:
+        rec["fig13_totals"] = fig13
+    return rec
+
+
+def _record_path() -> str:
+    d = os.path.dirname(__file__)
+    n = 0
+    while os.path.exists(os.path.join(d, f"BENCH_{n}.json")):
+        n += 1
+    return os.path.join(d, f"BENCH_{n}.json")
 
 
 def main() -> None:
@@ -24,6 +56,8 @@ def main() -> None:
                     help="comma-separated benchmark names")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "results.json"))
+    ap.add_argument("--record", action="store_true",
+                    help="write perf numbers to benchmarks/BENCH_<n>.json")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else BENCHES
 
@@ -51,6 +85,11 @@ def main() -> None:
                    f"ERROR: {type(e).__name__}: {e}")
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1, default=str)
+    if args.record:
+        path = _record_path()
+        with open(path, "w") as f:
+            json.dump(_perf_record(results), f, indent=1, default=str)
+        report("RECORD", 0.0, path)
     report("ALL/TOTAL", 0.0,
            f"{len(names) - len(failures)}/{len(names)} benchmarks ok"
            + (f"; failed: {failures}" if failures else ""))

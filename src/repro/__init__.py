@@ -16,12 +16,15 @@ Lower-level pieces stay importable from :mod:`repro.core` (the symbolic
 pipeline), :mod:`repro.models` / :mod:`repro.launch` (the jax runtime).
 ``repro.core.generate()`` is deprecated in favor of ``Scenario``.
 """
-from .api import Scenario, Trace, clear_graph_cache, graph_cache_stats
-from .core import (H100_HGX, TPU_V5E, HardwareProfile, MLASpec, ModelSpec,
-                   MoESpec, ParallelCfg, SSMSpec)
+from .api import (Scenario, Trace, clear_graph_cache, compiled_cache_stats,
+                  graph_cache_stats)
+from .core import (H100_HGX, TPU_V5E, HardwareProfile, InfeasibleConfigError,
+                   MLASpec, ModelSpec, MoESpec, ParallelCfg, SSMSpec,
+                   SweepResult)
 
 __all__ = [
     "Scenario", "Trace", "graph_cache_stats", "clear_graph_cache",
-    "ModelSpec", "MoESpec", "MLASpec", "SSMSpec", "ParallelCfg",
+    "compiled_cache_stats", "ModelSpec", "MoESpec", "MLASpec", "SSMSpec",
+    "ParallelCfg", "SweepResult", "InfeasibleConfigError",
     "HardwareProfile", "TPU_V5E", "H100_HGX",
 ]

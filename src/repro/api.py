@@ -46,9 +46,10 @@ from typing import Iterable, Optional
 
 from .core.assemble import ModelSpec, bind_env, build_graph, total_layers
 from .core.chakra import export_ranks, export_stage
+from .core.compiled import CompiledBackend
 from .core.costmodel import HardwareProfile, TPU_V5E
 from .core.distribute import DistReport, ParallelCfg, distribute
-from .core.dse import DSEPoint
+from .core.dse import DSEPoint, SweepResult
 from .core.dse import sweep as dse_sweep
 from .core.graphdist import PipelinePlan, apply_pipeline
 from .core.instantiate import Workload, instantiate
@@ -57,7 +58,8 @@ from .core.simulate import SimResult, simulate
 from .core.stg import Graph, GraphBuilder
 from .core.symbolic import Env
 
-__all__ = ["Scenario", "Trace", "graph_cache_stats", "clear_graph_cache"]
+__all__ = ["Scenario", "Trace", "graph_cache_stats", "clear_graph_cache",
+           "compiled_cache_stats"]
 
 
 # --------------------------------------------------------------------------
@@ -103,14 +105,62 @@ class _GraphCache:
 _cache = _GraphCache()
 
 
+class _EngineCache:
+    """Process-wide :class:`~repro.core.compiled.CompiledBackend` cache.
+
+    Keyed by ``(spec, mode, env signature)`` — one numeric engine (and
+    its structure classes) per distinct workload binding, shared between
+    every Trace and sweep that evaluates it."""
+
+    def __init__(self, maxsize: int = 8):
+        self.maxsize = maxsize
+        self._store: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+
+    def engine(self, spec: ModelSpec, mode: str, env: Env) -> CompiledBackend:
+        key = (spec, mode, env.signature())
+        with self._lock:
+            hit = self._store.get(key)
+            if hit is not None:
+                self._store.move_to_end(key)
+                return hit
+            src = _cache.builder(spec, mode)
+            eng = CompiledBackend(lambda: src.clone().graph, env,
+                                  n_layers=total_layers(spec))
+            self._store[key] = eng
+            while len(self._store) > self.maxsize:
+                self._store.popitem(last=False)
+            return eng
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+
+
+_engines = _EngineCache()
+
+
 def graph_cache_stats() -> dict:
     """{'size', 'builds', 'hits'} of the process-wide (spec, mode) cache."""
     return {"size": len(_cache._store), "builds": _cache.builds,
             "hits": _cache.hits}
 
 
+def compiled_cache_stats() -> dict:
+    """Aggregate structure-class stats over all cached compiled engines."""
+    with _engines._lock:
+        engines = list(_engines._store.values())
+    agg = {"engines": len(engines), "classes": 0, "compiles": 0, "hits": 0}
+    for e in engines:
+        s = e.stats()
+        for k in ("classes", "compiles", "hits"):
+            agg[k] += s[k]
+    return agg
+
+
 def clear_graph_cache() -> None:
     _cache.clear()
+    _engines.clear()
 
 
 # --------------------------------------------------------------------------
@@ -129,10 +179,13 @@ class Scenario:
     kv_len: Optional[int] = None
     cfg: ParallelCfg = field(default_factory=ParallelCfg)
     name: Optional[str] = None
+    backend: str = "compiled"               # compiled | sympy
 
     def __post_init__(self):
         if self.mode not in ("train", "prefill", "decode"):
             raise ValueError(f"mode {self.mode!r} not in train|prefill|decode")
+        if self.backend not in ("compiled", "sympy"):
+            raise ValueError(f"backend {self.backend!r} not in compiled|sympy")
 
     # ---- workload shape -------------------------------------------------
     def train(self, *, batch: int, seq: int) -> "Scenario":
@@ -197,6 +250,13 @@ class Scenario:
     def named(self, name: str) -> "Scenario":
         return replace(self, name=name)
 
+    def with_backend(self, backend: str) -> "Scenario":
+        """Select the evaluation backend: ``"compiled"`` (default —
+        lambdified numeric cost programs, structure-class cached) or
+        ``"sympy"`` (the reference per-op substitution path).  Both
+        produce identical workloads (tests/test_backend_parity.py)."""
+        return replace(self, backend=backend)
+
     # ---- derived --------------------------------------------------------
     @property
     def world(self) -> int:
@@ -221,23 +281,107 @@ class Scenario:
 
     def sweep(self, world: int, hw: HardwareProfile = TPU_V5E, *,
               mem_limit_gb: Optional[float] = None, recompute: bool = False,
-              **enum_kw) -> list[DSEPoint]:
+              workers: int = 0, executor: str = "thread",
+              **enum_kw) -> SweepResult:
         """One-shot DSE over every strategy for ``world`` devices (Fig 8).
 
         Enumerates power-of-two (dp, tp, cp, pp)[+FSDP] factorizations
         (``enum_kw`` forwards to
         :func:`repro.core.dse.enumerate_configs`: ``max_tp``, ``max_pp``,
-        ``max_cp``, ``with_fsdp``, ``ep``, ``microbatches``), runs
-        distribute -> pipeline-cut -> instantiate -> simulate + memory per
-        point on a clone of ONE cached assembly, and returns points
-        sorted by step time (infeasible factorizations skipped).
-        Delegates the loop to :func:`repro.core.dse.sweep` with a
-        cache-cloning ``build``."""
+        ``max_cp``, ``with_fsdp``, ``ep``, ``microbatches``), evaluates
+        every point, and returns a :class:`~repro.core.dse.SweepResult`
+        sorted by step time with infeasible factorizations recorded on
+        ``.skipped``.  With the default ``backend="compiled"`` the points
+        replay lambdified numeric cost programs from the shared
+        process-wide engine (one distribute + lowering per structure
+        class); ``backend="sympy"`` on the scenario runs the reference
+        per-point pipeline.  ``workers`` > 1 evaluates chunks of configs
+        concurrently with deterministic result ordering —
+        ``executor="thread"`` shares one engine across a thread pool
+        (GIL-bound; overlaps little CPU), ``executor="process"`` forks
+        workers that each compile their share of structure classes
+        (configs are partitioned by structure key, so no class is
+        compiled twice; falls back to serial where fork is unavailable)."""
+        env = self.env()
+        if workers and workers > 1 and executor == "process":
+            return self._sweep_processes(world, hw, env, workers,
+                                         mem_limit_gb=mem_limit_gb,
+                                         recompute=recompute, **enum_kw)
         src = _cache.builder(self.spec, self.mode)      # one assembly/mode
-        return dse_sweep(lambda: src.clone().graph, self.env(), world, hw,
+        engine = (_engines.engine(self.spec, self.mode, env)
+                  if self.backend == "compiled" else None)
+        return dse_sweep(lambda: src.clone().graph, env, world, hw,
                          n_layers=total_layers(self.spec),
                          mem_limit_gb=mem_limit_gb, recompute=recompute,
-                         name=self.spec.name, **enum_kw)
+                         name=self.spec.name, backend=self.backend,
+                         engine=engine, workers=workers, **enum_kw)
+
+    def _sweep_processes(self, world: int, hw: HardwareProfile, env: Env,
+                         workers: int, *, mem_limit_gb, recompute,
+                         **enum_kw) -> SweepResult:
+        import multiprocessing
+        import sys
+        from concurrent.futures import ProcessPoolExecutor
+
+        from .core.compiled import CompiledBackend
+        from .core.dse import enumerate_configs
+
+        # fork is the cheap path (workers inherit the warmed assembly
+        # cache), but forking a multithreaded parent can deadlock —
+        # jax in particular starts internal threads at import.  Use
+        # spawn in that case (workers re-derive state from the pickled
+        # Scenario), and fall back to threads where neither exists.
+        method = "fork"
+        if "jax" in sys.modules or threading.active_count() > 1:
+            method = "spawn"
+        try:
+            ctx = multiprocessing.get_context(method)
+        except ValueError:
+            return self.sweep(world, hw, mem_limit_gb=mem_limit_gb,
+                              recompute=recompute, workers=workers,
+                              executor="thread", **enum_kw)
+        cfgs = list(enumerate_configs(world, **enum_kw))
+        # partition by structure key: every class compiles in exactly one
+        # worker (and fork inherits the warmed assembly cache for free)
+        _cache.builder(self.spec, self.mode)
+        buckets: dict = {}
+        for i, cfg in enumerate(cfgs):
+            buckets.setdefault(CompiledBackend._structure_key(cfg),
+                               []).append((i, cfg))
+        chunks: list[list] = [[] for _ in range(workers)]
+        for b in sorted(buckets.values(), key=len, reverse=True):
+            min(chunks, key=len).extend(b)
+        chunks = [c for c in chunks if c]
+        with ProcessPoolExecutor(max_workers=len(chunks),
+                                 mp_context=ctx) as pool:
+            futs = [pool.submit(_sweep_chunk_worker, self, hw, c,
+                                mem_limit_gb, recompute)
+                    for c in chunks]
+            indexed = [r for f in futs for r in f.result()]
+        indexed.sort(key=lambda r: r[0])         # enumeration order
+        points = [r for _, r in indexed if isinstance(r, DSEPoint)]
+        skipped = [r for _, r in indexed if not isinstance(r, DSEPoint)]
+        points.sort(key=lambda p: p.sim.step_time)
+        return SweepResult(points, skipped, backend=self.backend)
+
+
+def _sweep_chunk_worker(sc: "Scenario", hw: HardwareProfile, items: list,
+                        mem_limit_gb, recompute) -> list:
+    """Process-pool body: evaluate ``[(enum index, cfg), ...]`` serially
+    with this worker's own compiled engine; returns indexed results."""
+    from .core.dse import evaluate_or_skip
+
+    env = sc.env()
+    engine = (_engines.engine(sc.spec, sc.mode, env)
+              if sc.backend == "compiled" else None)
+    src = _cache.builder(sc.spec, sc.mode)
+    return [(idx, evaluate_or_skip(
+                cfg, env=env, hw=hw, n_layers=total_layers(sc.spec),
+                name=sc.spec.name, engine=engine,
+                build=None if engine is not None else
+                (lambda: src.clone().graph),
+                recompute=recompute, mem_limit_gb=mem_limit_gb, reuse=True))
+            for idx, cfg in items]
 
 
 # --------------------------------------------------------------------------
@@ -296,8 +440,15 @@ class Trace:
         if self._workload is None:
             sc = self.scenario
             name = sc.name or f"{sc.spec.name}/{sc.mode}"
-            self._workload = instantiate(self.graph, sc.cfg, self.env,
-                                         self.plan, name=name)
+            if sc.backend == "compiled":
+                # numeric replay via the shared engine: no per-trace
+                # sympy substitution, and the structure class is reused
+                # across traces/sweeps with the same (spec, mode, env)
+                eng = _engines.engine(sc.spec, sc.mode, self.env)
+                self._workload = eng.workload(sc.cfg, name=name)
+            else:
+                self._workload = instantiate(self.graph, sc.cfg, self.env,
+                                             self.plan, name=name)
         return self._workload
 
     # ---- analyses (memoized) -------------------------------------------
@@ -321,10 +472,17 @@ class Trace:
                grad_dtype: str = "fp32") -> MemoryReport:
         key = (stage, recompute, master_fp32, grad_dtype)
         if key not in self._mem:
-            self._mem[key] = peak_memory(
-                self.graph, self.scenario.cfg, self.env, self.plan,
-                stage=stage, recompute=recompute, master_fp32=master_fp32,
-                grad_dtype=grad_dtype)
+            sc = self.scenario
+            if sc.backend == "compiled":
+                eng = _engines.engine(sc.spec, sc.mode, self.env)
+                self._mem[key] = eng.memory(
+                    sc.cfg, stage=stage, recompute=recompute,
+                    master_fp32=master_fp32, grad_dtype=grad_dtype)
+            else:
+                self._mem[key] = peak_memory(
+                    self.graph, sc.cfg, self.env, self.plan,
+                    stage=stage, recompute=recompute, master_fp32=master_fp32,
+                    grad_dtype=grad_dtype)
         return self._mem[key]
 
     # ---- workload summaries (paper tables) -----------------------------

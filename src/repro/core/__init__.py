@@ -8,11 +8,13 @@ Pipeline (paper Fig 3):
 from .assemble import (MLASpec, ModelSpec, MoESpec, SSMSpec, bind_env,
                        build_graph, total_layers)
 from .chakra import export_ranks, export_stage
+from .compiled import CompiledBackend, CostProgram
 from .costmodel import H100_HGX, TPU_V5E, HardwareProfile
 from .distribute import ParallelCfg, distribute
+from .dse import SweepResult
 from .graphdist import apply_pipeline
 from .instantiate import Workload, instantiate
-from .matcher import CommStep, match
+from .matcher import CommStep, InfeasibleConfigError, match
 from .memory import MemoryReport, peak_memory
 from .simulate import SimResult, simulate
 from .stg import Graph, GraphBuilder, add_optimizer, backward
@@ -21,9 +23,11 @@ from .tensor import REPLICATED, STensor, ShardSpec
 
 __all__ = [
     "MLASpec", "ModelSpec", "MoESpec", "SSMSpec", "bind_env", "build_graph",
-    "total_layers", "export_ranks", "export_stage", "H100_HGX", "TPU_V5E",
-    "HardwareProfile", "ParallelCfg", "distribute", "apply_pipeline",
-    "Workload", "instantiate", "CommStep", "match", "MemoryReport",
+    "total_layers", "export_ranks", "export_stage", "CompiledBackend",
+    "CostProgram", "H100_HGX", "TPU_V5E",
+    "HardwareProfile", "ParallelCfg", "distribute", "SweepResult",
+    "apply_pipeline", "Workload", "instantiate", "CommStep",
+    "InfeasibleConfigError", "match", "MemoryReport",
     "peak_memory", "SimResult", "simulate", "Graph", "GraphBuilder",
     "add_optimizer", "backward", "Env", "sym", "REPLICATED", "STensor",
     "ShardSpec", "generate",

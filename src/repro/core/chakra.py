@@ -87,32 +87,58 @@ def export_stage(w: Workload, stage: int, *, decompose_alltoall: bool = False) -
 
 
 def rank_coords(rank: int, cfg) -> dict:
-    """Decompose a flat rank id into (pp stage, per-axis coordinates)."""
+    """Decompose a flat rank id into (pp stage, per-axis coordinates).
+
+    Validates that ``rank`` addresses a real device: it must lie in
+    ``[0, cfg.world)`` and the residual pipeline coordinate must be a
+    valid stage index (``< cfg.pp``) — malformed ids raise instead of
+    being silently clamped downstream."""
+    world = cfg.world
+    if not 0 <= rank < world:
+        raise ValueError(f"rank {rank} out of range for world size {world} "
+                         f"(mesh {cfg.axes}, pp={cfg.pp})")
     coords = {}
     r = rank
     for name, size in cfg.axes.items():
         coords[name] = r % size
         r //= size
+    # defensive: for a consistent cfg this cannot fire (world = pp *
+    # prod(axes), so in-range ranks always decompose to r < pp); it
+    # guards cfgs whose fields were mutated after construction
+    if r >= max(1, cfg.pp):
+        raise ValueError(
+            f"rank {rank} decomposes to pipeline coordinate {r} but the "
+            f"config has only pp={cfg.pp} stages (mesh {cfg.axes})")
     coords["pp"] = r
     return coords
 
 
 def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = None,
                  *, decompose_alltoall: bool = False) -> int:
-    """Stamp per-rank Chakra JSON files (rank -> its stage's trace)."""
+    """Stamp per-rank Chakra JSON files (rank -> its stage's trace).
+
+    Each stage's node array is serialized exactly ONCE; per rank only the
+    small ``rank``/``coords`` tail is formatted and spliced onto the
+    pre-serialized body, so writing 32K rank files is dominated by file
+    I/O rather than 32K re-serializations of the same node list."""
     os.makedirs(out_dir, exist_ok=True)
     cfg = w.cfg
     world = cfg.world
-    per_stage = {s: export_stage(w, s, decompose_alltoall=decompose_alltoall)
-                 for s in range(w.stages)}
+    # pre-serialized stage bodies, open at the tail: '{... "nodes": [...]'
+    stage_body = {
+        s: json.dumps(export_stage(w, s, decompose_alltoall=decompose_alltoall))[:-1]
+        for s in range(w.stages)}
     count = 0
     for rank in (ranks if ranks is not None else range(world)):
         coords = rank_coords(rank, cfg)
-        stage = min(coords["pp"], w.stages - 1)
-        trace = dict(per_stage[stage])
-        trace["rank"] = rank
-        trace["coords"] = coords
+        stage = coords["pp"]
+        if stage >= w.stages:
+            raise ValueError(
+                f"rank {rank} maps to pipeline stage {stage} but the "
+                f"workload only has {w.stages} stage(s) — cfg/workload "
+                f"mismatch (cfg.pp={cfg.pp})")
         with open(os.path.join(out_dir, f"rank{rank}.json"), "w") as f:
-            json.dump(trace, f)
+            f.write(stage_body[stage])
+            f.write(f', "rank": {rank}, "coords": {json.dumps(coords)}}}')
         count += 1
     return count

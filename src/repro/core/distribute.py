@@ -20,6 +20,8 @@ grads + AllGather fresh params).
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -90,6 +92,59 @@ class ParallelCfg:
 ROLES = ("tp_col", "tp_row", "vocab", "expert", "kv_heads", "none")
 
 
+# --------------------------------------------------------------------------
+# Divisibility guards
+#
+# Every *structural* decision the distributor makes that depends on mesh
+# DEGREES (rather than on axis names / flags) is a divisibility test:
+# "does dim value d split evenly over the product of these axes?".  The
+# compiled backend (compiled.py) records these predicates while tracing
+# one reference distribution and replays them as guards: any config with
+# the same axis names/flags and the same guard outcomes shares the same
+# distributed graph structure, so its numeric workload can be produced
+# without re-running the distributor (JAX-style trace-and-guard caching).
+# --------------------------------------------------------------------------
+
+_guard_log: contextvars.ContextVar = contextvars.ContextVar(
+    "stage_dist_guards", default=None)
+
+
+@contextlib.contextmanager
+def record_guards():
+    """Collect ``(dim value, axis names, outcome)`` divisibility predicates
+    evaluated by :func:`distribute` within the block."""
+    log: dict = {}
+    token = _guard_log.set(log)
+    try:
+        yield log
+    finally:
+        _guard_log.reset(token)
+
+
+def _div_ok(env: Env, expr, cfg: "ParallelCfg", axes: tuple[str, ...]) -> bool:
+    """Guarded divisibility test: ``env(expr) % prod(cfg.axes[a]) == 0``."""
+    val = env.evaluate(expr)
+    deg = 1
+    for a in axes:
+        deg *= cfg.axes[a]
+    ok = val % deg == 0
+    log = _guard_log.get()
+    if log is not None:
+        log[(val, axes)] = ok
+    return ok
+
+
+def guards_match(guards: dict, cfg: "ParallelCfg") -> bool:
+    """Would ``cfg`` take the same structural path as the recorded run?"""
+    for (val, axes), ok in guards.items():
+        deg = 1
+        for a in axes:
+            deg *= cfg.axes[a]
+        if (val % deg == 0) != ok:
+            return False
+    return True
+
+
 def weight_storage_spec(w: STensor, cfg: ParallelCfg, env: Env) -> ShardSpec:
     """Map template roles -> mesh axes (Table III strategies)."""
     part: dict[int, tuple[str, ...]] = {}
@@ -104,20 +159,16 @@ def weight_storage_spec(w: STensor, cfg: ParallelCfg, env: Env) -> ShardSpec:
         elif role == "kv_heads":
             axis = cfg.tp_axis
             # GQA with few kv heads: cannot shard below 1 head (e.g. MQA kv=1)
-            if axis and env.evaluate(w.shape[dim]) % cfg.axes[axis] != 0:
+            if axis and not _div_ok(env, w.shape[dim], cfg, (axis,)):
                 axis = None
-        if axis and axis not in used and env.evaluate(w.shape[dim]) % cfg.axes[axis] == 0:
+        if axis and axis not in used and _div_ok(env, w.shape[dim], cfg, (axis,)):
             part[dim] = (axis,)
             used.add(axis)
     if cfg.fsdp and cfg.dp_axis and cfg.dp_axis not in used:
         # ZeRO-3: shard storage over dp on the first evenly-divisible dim.
         for dim in range(w.rank):
             cur = part.get(dim, ())
-            deg = 1
-            for a in cur:
-                deg *= cfg.axes[a]
-            size = env.evaluate(w.shape[dim])
-            if size % (deg * cfg.axes[cfg.dp_axis]) == 0:
+            if _div_ok(env, w.shape[dim], cfg, cur + (cfg.dp_axis,)):
                 part[dim] = cur + (cfg.dp_axis,)
                 break
     return ShardSpec.make(part)
@@ -128,10 +179,10 @@ def _act_input_spec(cfg: ParallelCfg, shape, env: Env,
     part: dict[int, tuple[str, ...]] = {}
     if len(shape) <= batch_dim:
         return REPLICATED
-    if cfg.dp_axis and env.evaluate(shape[batch_dim]) % cfg.axes[cfg.dp_axis] == 0:
+    if cfg.dp_axis and _div_ok(env, shape[batch_dim], cfg, (cfg.dp_axis,)):
         part[batch_dim] = (cfg.dp_axis,)
     if (cfg.cp_axis and seq_dim is not None and len(shape) > seq_dim
-            and env.evaluate(shape[seq_dim]) % cfg.axes[cfg.cp_axis] == 0):
+            and _div_ok(env, shape[seq_dim], cfg, (cfg.cp_axis,))):
         part[seq_dim] = (cfg.cp_axis,)
     return ShardSpec.make(part)
 
@@ -152,6 +203,15 @@ class Distributor:
         # consumers in that phase (matches real frameworks: one AllGather
         # feeds q/k/v; backward re-gathers — FSDP/SP semantics).
         self._comm_cache: dict = {}
+        # storage specs are pure in (weight, cfg): compute once per weight
+        self._wspec_cache: dict[int, ShardSpec] = {}
+
+    def _wspec(self, w: STensor) -> ShardSpec:
+        spec = self._wspec_cache.get(w.uid)
+        if spec is None:
+            spec = weight_storage_spec(w, self.cfg, self.env)
+            self._wspec_cache[w.uid] = spec
+        return spec
 
     # -- helpers -----------------------------------------------------------
     def _unshard_weight(self, spec: ShardSpec) -> ShardSpec:
@@ -191,7 +251,7 @@ class Distributor:
             t, letters = op.ins[i], op.in_specs[i]
             base = t.spec
             if t.kind == "weight":
-                base = self._unshard_weight(weight_storage_spec(t, cfg, env))
+                base = self._unshard_weight(self._wspec(t))
             for dim, axis in base.partition:
                 candidates.setdefault(axis, []).append(letters[dim])
         for axis, letts in candidates.items():
@@ -204,7 +264,7 @@ class Distributor:
             t, letters = op.ins[i], op.in_specs[i]
             base = t.spec
             if t.kind == "weight":
-                base = self._unshard_weight(weight_storage_spec(t, cfg, env))
+                base = self._unshard_weight(self._wspec(t))
             part: dict[int, tuple[str, ...]] = {}
             for dim, axis in base.partition:
                 if axis_owner.get(axis) == letters[dim]:
@@ -221,7 +281,7 @@ class Distributor:
                 spec = desired[i]
                 if axis in spec.all_axes:
                     continue
-                if env.evaluate(op._dims[letter]) % cfg.axes[axis] != 0:
+                if not _div_ok(env, op._dims[letter], cfg, (axis,)):
                     continue
                 desired[i] = spec.with_partition(dim, axis)
         for i in range(len(op.ins)):
@@ -253,7 +313,7 @@ class Distributor:
             # characteristic ReduceScatter instead of an AllReduce.
             used = {a for _, a in desired_ref.partition}
             if cfg.tp_axis not in used \
-                    and self.env.evaluate(ref.shape[1]) % cfg.axes[cfg.tp_axis] == 0:
+                    and _div_ok(self.env, ref.shape[1], cfg, (cfg.tp_axis,)):
                 desired_ref = desired_ref.with_partition(1, cfg.tp_axis)
         if desired_ref != ref.spec:
             self._fix(b, op, ref_i, desired_ref)
@@ -303,7 +363,7 @@ class Distributor:
             # Megatron SP: residual-stream activations sharded on sequence
             used = {a for axes in part.values() for a in axes}
             if cfg.tp_axis not in used \
-                    and self.env.evaluate(x.shape[1]) % cfg.axes[cfg.tp_axis] == 0:
+                    and _div_ok(self.env, x.shape[1], cfg, (cfg.tp_axis,)):
                 part[1] = part.get(1, ()) + (cfg.tp_axis,)
         desired = ShardSpec.make({d: a for d, a in part.items() if a})
         self._fix(b, op, 0, desired)
@@ -347,7 +407,7 @@ class Distributor:
 
     def _embed(self, b: GraphBuilder, op: Embed) -> None:
         table, ids = op.ins
-        store = weight_storage_spec(table, self.cfg, self.env)
+        store = self._wspec(table)
         self._fix(b, op, 0, self._unshard_weight(store))
         table = op.ins[0]
         ids_spec = _act_input_spec(self.cfg, ids.shape, self.env)
@@ -414,8 +474,7 @@ class Distributor:
 
     def _scatter_add(self, b: GraphBuilder, op: ScatterAdd) -> None:
         table = getattr(op, "table", None)
-        store = weight_storage_spec(table, self.cfg, self.env) \
-            if table is not None else ShardSpec()
+        store = self._wspec(table) if table is not None else ShardSpec()
         vocab_axes = set(store.axes_of_dim(0))
         g = op.ins[0]
         # grads must be full along axes that shard the vocab dim (each rank
@@ -438,15 +497,13 @@ class Distributor:
     def _update(self, b: GraphBuilder, op: Update) -> None:
         cfg, env = self.cfg, self.env
         w, g = op.ins
-        store = weight_storage_spec(w, cfg, env)
+        store = self._wspec(w)
         shard = store
         if cfg.zero1 and cfg.dp_axis and cfg.dp_axis not in store.all_axes:
             # ZeRO-1: shard the *update* over dp even though storage is full
             for dim in range(w.rank):
-                deg = 1
-                for a in store.axes_of_dim(dim):
-                    deg *= cfg.axes[a]
-                if env.evaluate(w.shape[dim]) % (deg * cfg.axes[cfg.dp_axis]) == 0:
+                cur = store.axes_of_dim(dim)
+                if _div_ok(env, w.shape[dim], cfg, cur + (cfg.dp_axis,)):
                     shard = store.with_partition(dim, cfg.dp_axis)
                     break
         w.spec = store

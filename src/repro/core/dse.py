@@ -6,6 +6,25 @@ for each point, and scores it with the analytical simulator + memory
 model.  This doubles as the runtime framework's auto-parallelism
 advisor: rank configurations before compiling anything.
 
+Two evaluation backends:
+
+* ``backend="compiled"`` (default) — a :class:`~repro.core.compiled.CompiledBackend`
+  shared across the sweep lowers each distributed-graph *structure
+  class* once into a lambdified numeric cost program and replays it per
+  config, so most points cost array arithmetic instead of sympy
+  substitutions (≥10× on Fig-8-style sweeps).
+* ``backend="sympy"`` — the reference path (:func:`evaluate_point`),
+  one full symbolic pipeline per config.
+
+Points can be evaluated concurrently (``workers`` > 1): configs are
+chunked over a ``concurrent.futures`` thread pool and results are
+reassembled in enumeration order, so the returned ranking is
+deterministic regardless of worker count.
+
+Infeasible factorizations are no longer silently dropped: only
+:class:`~repro.core.matcher.InfeasibleConfigError` is caught, and every
+skipped config is recorded with its reason on ``SweepResult.skipped``.
+
 The preferred entrypoint is :meth:`repro.api.Scenario.sweep`, which
 calls :func:`sweep` with a ``build`` that clones ONE cached symbolic
 assembly per mode; the callable-based :func:`sweep` stays public for
@@ -15,13 +34,16 @@ callers that need a custom ``build`` (a plain
 from __future__ import annotations
 
 import itertools
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
 
+from .compiled import CompiledBackend
 from .costmodel import HardwareProfile, TPU_V5E
 from .distribute import ParallelCfg, distribute
 from .graphdist import apply_pipeline
 from .instantiate import Workload, instantiate
+from .matcher import InfeasibleConfigError
 from .memory import MemoryReport, peak_memory
 from .simulate import SimResult, simulate
 from .symbolic import Env
@@ -47,6 +69,28 @@ class DSEPoint:
                 "peak_gb": round(self.peak_gb, 2),
                 "overlap": round(self.sim.overlap_ratio, 3),
                 "exposed_comm_ms": round(self.sim.exposed_comm * 1e3, 3)}
+
+
+@dataclass
+class SkippedConfig:
+    """A config the sweep could not realize, with the reason why."""
+    cfg: ParallelCfg
+    reason: str
+
+
+class SweepResult(list):
+    """Feasible :class:`DSEPoint` list (sorted by step time) plus the
+    configs that were skipped as infeasible.  Subclasses ``list`` so all
+    pre-existing ``sweep(...)[0]`` / iteration call sites keep working."""
+
+    def __init__(self, points=(), skipped=(), backend: str = "compiled"):
+        super().__init__(points)
+        self.skipped: list[SkippedConfig] = list(skipped)
+        self.backend = backend
+
+    @property
+    def points(self) -> list[DSEPoint]:
+        return list(self)
 
 
 def _pow2_divisors(n: int) -> list[int]:
@@ -96,8 +140,9 @@ def enumerate_configs(world: int, *, max_tp: int = 64, max_pp: int = 64,
 def evaluate_point(build: Callable[[], tuple], cfg: ParallelCfg, env: Env,
                    hw: HardwareProfile = TPU_V5E, *, n_layers: int,
                    recompute: bool = False, name: str = "dse") -> DSEPoint:
-    """Run the full STAGE pipeline for one config.  ``build`` must return a
-    fresh (GraphBuilder-owned) Graph each call (graphs are mutated)."""
+    """Reference (sympy) backend: run the full STAGE pipeline for one
+    config.  ``build`` must return a fresh (GraphBuilder-owned) Graph
+    each call (graphs are mutated)."""
     graph = build()
     distribute(graph, cfg, env)
     plan = apply_pipeline(graph, cfg.pp, n_layers)
@@ -107,20 +152,89 @@ def evaluate_point(build: Callable[[], tuple], cfg: ParallelCfg, env: Env,
     return DSEPoint(cfg=cfg, sim=sim, mem=mem, label=cfg.describe())
 
 
+def evaluate_point_compiled(engine: CompiledBackend, cfg: ParallelCfg,
+                            hw: HardwareProfile = TPU_V5E, *,
+                            recompute: bool = False, name: str = "dse",
+                            reuse: bool = False) -> DSEPoint:
+    """Compiled backend: numeric replay of the config's structure class.
+
+    ``reuse=True`` recycles the program's scratch workload between
+    points (scratch is keyed per thread, so concurrent serial sweeps
+    sharing one engine stay isolated)."""
+    prog = engine.program(cfg)
+    w = prog.instantiate(cfg, name=f"{name}/{cfg.describe()}", reuse=reuse)
+    sim = simulate(w, hw, recompute=recompute)
+    mem = prog.peak_memory(cfg, recompute=recompute)
+    return DSEPoint(cfg=cfg, sim=sim, mem=mem, label=cfg.describe())
+
+
+def evaluate_or_skip(cfg: ParallelCfg, *, env: Env, hw: HardwareProfile,
+                     n_layers: int, name: str,
+                     engine: Optional[CompiledBackend] = None,
+                     build: Optional[Callable] = None,
+                     recompute: bool = False,
+                     mem_limit_gb: Optional[float] = None,
+                     reuse: bool = False):
+    """One sweep point, shared by every execution mode (serial, thread
+    chunks, process chunks): returns a :class:`DSEPoint` (OOM-labelled
+    when over ``mem_limit_gb``) or a :class:`SkippedConfig` when the
+    factorization is infeasible.  Exactly one of ``engine`` (compiled)
+    or ``build`` (sympy reference) must be provided."""
+    try:
+        if engine is not None:
+            pt = evaluate_point_compiled(engine, cfg, hw,
+                                         recompute=recompute, name=name,
+                                         reuse=reuse)
+        else:
+            pt = evaluate_point(build, cfg, env, hw, n_layers=n_layers,
+                                recompute=recompute, name=name)
+    except InfeasibleConfigError as e:
+        return SkippedConfig(cfg, f"{type(e).__name__}: {e}")
+    if mem_limit_gb is not None and pt.peak_gb > mem_limit_gb:
+        pt.label += " (OOM)"
+    return pt
+
+
 def sweep(build: Callable[[], tuple], env: Env, world: int,
           hw: HardwareProfile = TPU_V5E, *, n_layers: int,
           mem_limit_gb: Optional[float] = None,
           recompute: bool = False, name: str = "dse",
-          **enum_kw) -> list[DSEPoint]:
-    points = []
-    for cfg in enumerate_configs(world, **enum_kw):
-        try:
-            pt = evaluate_point(build, cfg, env, hw, n_layers=n_layers,
-                                recompute=recompute, name=name)
-        except Exception:
-            continue                      # infeasible factorization
-        if mem_limit_gb is not None and pt.peak_gb > mem_limit_gb:
-            pt.label += " (OOM)"
-        points.append(pt)
+          backend: str = "compiled", engine: Optional[CompiledBackend] = None,
+          workers: int = 0, chunk_size: int = 16,
+          **enum_kw) -> SweepResult:
+    """Evaluate every enumerated strategy; see module docstring.
+
+    ``workers`` > 1 evaluates config chunks on a thread pool (results
+    are identical and identically ordered to the serial run); ``engine``
+    lets callers share a pre-warmed :class:`CompiledBackend` across
+    sweeps (what :meth:`repro.api.Scenario.sweep` does).
+    """
+    if backend not in ("compiled", "sympy"):
+        raise ValueError(f"backend {backend!r} not in compiled|sympy")
+    cfgs = list(enumerate_configs(world, **enum_kw))
+    if backend == "compiled" and engine is None:
+        engine = CompiledBackend(build, env, n_layers=n_layers)
+
+    serial = not (workers and workers > 1)
+
+    def eval_one(cfg: ParallelCfg):
+        return evaluate_or_skip(
+            cfg, env=env, hw=hw, n_layers=n_layers, name=name,
+            engine=engine, build=None if backend == "compiled" else build,
+            recompute=recompute, mem_limit_gb=mem_limit_gb, reuse=serial)
+
+    if workers and workers > 1 and len(cfgs) > 1:
+        chunks = [cfgs[i:i + chunk_size]
+                  for i in range(0, len(cfgs), chunk_size)]
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            futs = [pool.submit(lambda ch=ch: [eval_one(c) for c in ch])
+                    for ch in chunks]
+            results = list(itertools.chain.from_iterable(
+                f.result() for f in futs))     # enumeration order restored
+    else:
+        results = [eval_one(cfg) for cfg in cfgs]
+
+    points = [r for r in results if isinstance(r, DSEPoint)]
+    skipped = [r for r in results if isinstance(r, SkippedConfig)]
     points.sort(key=lambda p: p.sim.step_time)
-    return points
+    return SweepResult(points, skipped, backend=backend)

@@ -7,6 +7,13 @@ edges.  Because every rank within a stage is SPMD-identical (tensor-level
 distribution), one representative rank per stage captures the whole
 system — this is what makes STAGE's 32K-GPU synthesis cheap (Fig 13):
 per-rank export is a stamping pass over the representative record.
+
+This module is the REFERENCE evaluation backend (per-op sympy
+substitution).  :mod:`repro.core.compiled` mirrors every cost formula
+here operation-for-operation in the same float-arithmetic order so its
+numeric replay is bit-identical — if you change how a NodeRec field is
+computed, update the compiled kernels too (tests/test_backend_parity.py
+enforces the contract).
 """
 from __future__ import annotations
 

@@ -25,6 +25,7 @@ in Table IV (``ReduceScatter + AllToAll``, ``AllReduce + AllGather``).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Optional
 
@@ -40,7 +41,16 @@ class CommStep:
     dim_dst: Optional[int] = None    # destination dim for AllToAll
 
 
-class MatchError(ValueError):
+class InfeasibleConfigError(ValueError):
+    """A parallelization config cannot be realized for this graph.
+
+    Raised (directly or via :class:`MatchError`) when the pipeline hits a
+    structural impossibility for the requested factorization; DSE sweeps
+    catch exactly this type and record the config as skipped-with-reason
+    instead of silently dropping it."""
+
+
+class MatchError(InfeasibleConfigError):
     pass
 
 
@@ -91,7 +101,10 @@ def match(produced: ShardSpec, desired: ShardSpec) -> list[CommStep]:
     return steps
 
 
+@functools.lru_cache(maxsize=4096)
 def _canon(spec: ShardSpec) -> ShardSpec:
+    # hot in distribution (every _fix compares canon forms); ShardSpec is
+    # frozen/hashable and the distinct-spec population is small
     return ShardSpec.make({d: tuple(sorted(spec.axes_of_dim(d)))
                            for d, _ in spec.partition},
                           tuple(sorted(spec.partial)))

@@ -15,6 +15,11 @@ quantity directly on the instantiated graph:
   working set is bounded by one layer's activations.
 * **Pipeline in-flight factor** — with 1F1B, stage ``s`` keeps
   ``min(microbatches, pp - s)`` microbatches of activations alive.
+
+This is the REFERENCE memory model; ``CostProgram.peak_memory`` in
+:mod:`repro.core.compiled` mirrors it term-for-term (same accumulation
+order, same event-sweep semantics) for bit-identical numeric replay —
+keep both in sync (tests/test_backend_parity.py enforces it).
 """
 from __future__ import annotations
 

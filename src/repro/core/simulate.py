@@ -15,7 +15,7 @@ from __future__ import annotations
 import heapq
 from dataclasses import dataclass, field
 
-from .costmodel import HardwareProfile, comm_time, compute_time, node_time
+from .costmodel import HardwareProfile
 from .instantiate import NodeRec, Workload
 
 
@@ -44,22 +44,54 @@ class SimResult:
 
 def _schedule(nodes: list[NodeRec], hw: HardwareProfile) -> tuple[float, float, float]:
     """List-schedule on {compute, comm} streams; returns
-    (makespan, compute_busy, comm_busy)."""
+    (makespan, compute_busy, comm_busy).
+
+    Hot loop: runs once per stage per sweep point, so the stream state
+    lives in locals and the roofline/ring cost models are inlined (the
+    compiled backend makes everything around this numeric — the
+    scheduler must keep up).  The inlined math MUST stay equivalent to
+    :func:`repro.core.costmodel.node_time` — tests/test_dse_sweep.py::
+    test_schedule_matches_costmodel pins the two together."""
     finish: dict[int, float] = {}
-    free = {"compute": 0.0, "comm": 0.0}
-    busy = {"compute": 0.0, "comm": 0.0}
-    makespan = 0.0
+    fget = finish.get
+    free_comp = free_comm = busy_comp = busy_comm = 0.0
+    peak = hw.peak_flops
+    hbm = hw.hbm_bw
+    eff = hw.efficiency
+    lat = hw.link_latency
+    axis_bw = hw.link_bw_axis
+    link_bw = hw.link_bw
     for n in nodes:                                  # already topologically ordered
-        dur = node_time(n, hw)
-        stream = "comm" if n.comm is not None else "compute"
-        ready = max((finish.get(d, 0.0) for d in n.deps), default=0.0)
-        start = max(ready, free[stream])
-        end = start + dur
+        comm = n.comm
+        ready = 0.0
+        for d in n.deps:
+            t = fget(d, 0.0)
+            if t > ready:
+                ready = t
+        if comm is not None:
+            g = int(comm["group"])
+            if g <= 1:
+                dur = 0.0
+            else:
+                bw = axis_bw.get(comm["axis"], link_bw)
+                steps = (g - 1) if comm["coll"] != "AllReduce" else 2 * (g - 1)
+                dur = comm["wire"] / bw + steps * lat
+            start = ready if ready > free_comm else free_comm
+            end = start + dur
+            free_comm = end
+            busy_comm += dur
+        else:
+            flops = n.flops
+            t_flops = flops / (peak * eff.get(n.category, 0.9)) if flops else 0.0
+            t_mem = n.bytes_accessed / hbm
+            dur = t_flops if t_flops > t_mem else t_mem
+            start = ready if ready > free_comp else free_comp
+            end = start + dur
+            free_comp = end
+            busy_comp += dur
         finish[n.uid] = end
-        free[stream] = end
-        busy[stream] += dur
-        makespan = max(makespan, end)
-    return makespan, busy["compute"], busy["comm"]
+    makespan = free_comp if free_comp > free_comm else free_comm
+    return makespan, busy_comp, busy_comm
 
 
 def simulate(w: Workload, hw: HardwareProfile, *,

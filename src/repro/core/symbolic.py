@@ -99,6 +99,11 @@ class Env(dict):
     def evaluate_shape(self, shape: tuple[Expr, ...]) -> tuple[int, ...]:
         return tuple(self.evaluate(d) for d in shape)
 
+    def signature(self) -> tuple:
+        """Hashable identity of the bindings (cache key for compiled
+        cost programs — one numeric program per distinct binding)."""
+        return tuple(sorted((s.name, v) for s, v in self.items()))
+
 
 def prod(exprs) -> sp.Expr:
     out: sp.Expr = sp.Integer(1)

@@ -14,6 +14,7 @@ needs (paper Fig 5/6, Table IV).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from dataclasses import dataclass, field
 from typing import Optional, TYPE_CHECKING
 
@@ -63,7 +64,16 @@ class ShardSpec:
 
     # -- queries ---------------------------------------------------------
     def axes_of_dim(self, dim: int) -> tuple[str, ...]:
-        return tuple(a for d, a in self.partition if d == dim)
+        # hot query during distribution: lazily build a dim->axes table
+        # (instance-cached via object.__setattr__; excluded from eq/hash,
+        # which dataclasses derive from the declared fields only)
+        by_dim = self.__dict__.get("_by_dim")
+        if by_dim is None:
+            by_dim = {}
+            for d, a in self.partition:
+                by_dim[d] = by_dim.get(d, ()) + (a,)
+            object.__setattr__(self, "_by_dim", by_dim)
+        return by_dim.get(dim, ())
 
     def dim_of_axis(self, axis: str) -> Optional[int]:
         for d, a in self.partition:
@@ -133,12 +143,12 @@ class ShardSpec:
 
 REPLICATED = ShardSpec()
 
-_uid = [0]
+# atomic under the GIL (concurrent sweep workers clone graphs in threads)
+_uid = itertools.count(1)
 
 
 def _next_uid() -> int:
-    _uid[0] += 1
-    return _uid[0]
+    return next(_uid)
 
 
 @dataclass(eq=False)
@@ -153,7 +163,10 @@ class STensor:
     uid: int = field(default_factory=_next_uid)
 
     def __post_init__(self):
-        self.shape = tuple(sp.sympify(d) for d in self.shape)
+        if not all(isinstance(d, sp.Basic) for d in self.shape):
+            self.shape = tuple(sp.sympify(d) for d in self.shape)
+        elif not isinstance(self.shape, tuple):
+            self.shape = tuple(self.shape)
 
     # -- sizes -----------------------------------------------------------
     @property

@@ -1,0 +1,112 @@
+"""Compiled-vs-sympy backend parity for every bundled model config.
+
+The compiled backend (repro.core.compiled) must reproduce the reference
+sympy evaluation path bit-identically — same per-GPU op counts, comm
+volumes, FLOP totals, simulated step time, and peak memory — across
+train and serve modes for each architecture family in
+``src/repro/configs/``.  The numeric kernels mirror the reference
+float-arithmetic order, so equality here is exact (``==``), not
+approximate.
+"""
+import pytest
+
+from repro import Scenario, TPU_V5E
+from repro.configs import ARCHS, get
+
+MODES = ("train", "serve")
+
+
+def _scenario(spec, mode):
+    sc = Scenario(spec)
+    if mode == "train":
+        sc = sc.train(batch=8, seq=64)
+    else:
+        sc = sc.serve(batch=4, kv_len=128)
+    return sc.parallel(dp=2, tp=2, sp=True, pp=2, microbatches=2,
+                       ep=spec.moe is not None)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("name", ARCHS)
+def test_backend_parity(name, mode):
+    spec = get(name).smoke
+    sc = _scenario(spec, mode)
+    ref = sc.with_backend("sympy").trace()
+    cmp_ = sc.trace()
+
+    # workload summaries (paper Tables VI/VII)
+    for stage in range(ref.workload.stages):
+        assert ref.op_counts(stage) == cmp_.op_counts(stage)
+        assert ref.comm_counts(stage) == cmp_.comm_counts(stage)
+        assert ref.comm_volume(stage) == cmp_.comm_volume(stage)
+        assert ref.total_flops(stage) == cmp_.total_flops(stage)
+
+    # analytic step time and peak memory, plain and with recompute
+    for recompute in (False, True):
+        s_ref = ref.simulate(TPU_V5E, recompute=recompute)
+        s_cmp = cmp_.simulate(TPU_V5E, recompute=recompute)
+        assert s_ref.step_time == s_cmp.step_time
+        assert s_ref.exposed_comm == s_cmp.exposed_comm
+        m_ref = ref.memory(recompute=recompute)
+        m_cmp = cmp_.memory(recompute=recompute)
+        for f in ("weights", "grads", "opt_states", "master_params",
+                  "peak_activation", "inflight_factor", "recompute_extra"):
+            assert getattr(m_ref, f) == getattr(m_cmp, f), f
+
+
+def test_parity_per_node_tiny():
+    """Node-level parity (names, costs, comm records, dep counts)."""
+    spec = get("qwen3-14b").smoke
+    sc = _scenario(spec, "train")
+    wr = sc.with_backend("sympy").trace().workload
+    wc = sc.trace().workload
+    assert len(wr.nodes) == len(wc.nodes)
+    for a, b in zip(wr.nodes, wc.nodes):
+        assert (a.name, a.kind, a.category, a.phase, a.stage, a.repeat) == \
+               (b.name, b.kind, b.category, b.phase, b.stage, b.repeat)
+        assert a.flops == b.flops, a.name
+        assert a.bytes_accessed == b.bytes_accessed, a.name
+        assert a.out_bytes == b.out_bytes, a.name
+        assert a.comm == b.comm, a.name
+        assert len(a.deps) == len(b.deps), a.name
+        assert a.tags == b.tags, a.name
+
+
+def test_sweep_backend_parity():
+    """Whole-sweep equality: same ranking, times, memory, skip lists."""
+    spec = get("minitron-8b").smoke
+    sc = Scenario(spec).train(batch=16, seq=64)
+    ref = sc.with_backend("sympy").sweep(16)
+    cmp_ = sc.sweep(16)
+    assert len(ref) == len(cmp_) and len(ref) > 0
+    assert len(ref.skipped) == len(cmp_.skipped)
+    for a, b in zip(ref, cmp_):
+        assert a.label == b.label
+        assert a.sim.step_time == b.sim.step_time
+        assert a.mem.peak_bytes == b.mem.peak_bytes
+
+
+def test_fresh_workloads_are_isolated():
+    """Mutating one compiled trace's node tags must not leak into other
+    traces sharing the engine (same isolation as the sympy backend)."""
+    spec = get("qwen3-14b").smoke
+    sc = _scenario(spec, "train")
+    w1 = sc.trace().workload
+    w1.nodes[10].tags["poison"] = True
+    w1.stage_of[w1.nodes[0].uid] = 99
+    w2 = sc.trace().workload
+    assert "poison" not in w2.nodes[10].tags
+    assert w2.stage_of[w2.nodes[0].uid] != 99
+
+
+def test_compiled_structure_classes_are_reused():
+    """Second identical sweep must be pure replay: zero new compiles."""
+    from repro import compiled_cache_stats
+    spec = get("gemma2-27b").smoke
+    sc = Scenario(spec).train(batch=8, seq=64)
+    sc.sweep(8)
+    before = compiled_cache_stats()
+    sc.sweep(8)
+    after = compiled_cache_stats()
+    assert after["compiles"] == before["compiles"]
+    assert after["hits"] > before["hits"]

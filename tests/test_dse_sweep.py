@@ -1,0 +1,167 @@
+"""DSE sweep driver semantics: skip accounting, concurrency determinism,
+and the Chakra export fast path introduced with the compiled backend."""
+import json
+
+import pytest
+
+from repro import ParallelCfg, Scenario
+from repro.core import ModelSpec
+from repro.core.chakra import export_stage, rank_coords
+from repro.core.dse import SkippedConfig, SweepResult, sweep
+from repro.core.matcher import InfeasibleConfigError, MatchError
+from repro.core.symbolic import Env
+
+TINY = ModelSpec(name="tiny", n_layers=4, d_model=256, n_heads=8,
+                 n_kv_heads=4, d_ff=512, vocab=4096)
+
+
+# ---- skip accounting (no silent drops) ------------------------------------
+
+def test_sweep_records_skipped_configs():
+    def build():
+        raise MatchError("cannot synthesize PartialSum over dp")
+
+    res = sweep(build, Env(B=8, S=64), 4, n_layers=4, backend="sympy")
+    assert isinstance(res, SweepResult)
+    assert len(res) == 0
+    assert len(res.skipped) > 0
+    for sk in res.skipped:
+        assert isinstance(sk, SkippedConfig)
+        assert "PartialSum" in sk.reason
+        assert isinstance(sk.cfg, ParallelCfg)
+
+
+def test_sweep_propagates_unexpected_errors():
+    def build():
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError):
+        sweep(build, Env(B=8, S=64), 4, n_layers=4, backend="sympy")
+
+
+def test_infeasible_error_is_value_error_subclass():
+    # existing except ValueError call sites keep working
+    assert issubclass(MatchError, InfeasibleConfigError)
+    assert issubclass(InfeasibleConfigError, ValueError)
+
+
+def test_sweep_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        sweep(lambda: None, Env(B=8, S=64), 4, n_layers=4, backend="numpy")
+
+
+# ---- concurrency: deterministic ordering ----------------------------------
+
+def _labels(res):
+    return [(p.label, p.sim.step_time, p.mem.peak_bytes) for p in res]
+
+
+def test_thread_workers_deterministic():
+    sc = Scenario(TINY).train(batch=16, seq=64)
+    serial = sc.sweep(16)
+    threaded = sc.sweep(16, workers=2)
+    assert _labels(serial) == _labels(threaded)
+
+
+def test_process_workers_deterministic():
+    sc = Scenario(TINY).train(batch=16, seq=64)
+    serial = sc.sweep(16)
+    procs = sc.sweep(16, workers=2, executor="process")
+    assert _labels(serial) == _labels(procs)
+
+
+def test_concurrent_serial_sweeps_are_isolated():
+    """Serial sweeps share the process-wide engine; launched from
+    multiple threads they must not corrupt each other's scratch
+    workloads (scratch is keyed per thread)."""
+    from concurrent.futures import ThreadPoolExecutor
+    sc = Scenario(TINY).train(batch=16, seq=64)
+    ref = _labels(sc.sweep(16))
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        futs = [pool.submit(lambda: _labels(sc.sweep(16)))
+                for _ in range(8)]
+        for f in futs:
+            assert f.result() == ref
+
+
+# ---- rank_coords validation -----------------------------------------------
+
+def test_rank_coords_roundtrip():
+    cfg = ParallelCfg(axes={"dp": 2, "tp": 4}, dp_axis="dp", tp_axis="tp",
+                      sp=True, pp=2)
+    seen = set()
+    for rank in range(cfg.world):
+        c = rank_coords(rank, cfg)
+        assert 0 <= c["dp"] < 2 and 0 <= c["tp"] < 4 and 0 <= c["pp"] < 2
+        seen.add((c["dp"], c["tp"], c["pp"]))
+    assert len(seen) == cfg.world
+
+
+@pytest.mark.parametrize("rank", [-1, 16, 1000])
+def test_rank_coords_out_of_range(rank):
+    cfg = ParallelCfg(axes={"dp": 2, "tp": 4}, dp_axis="dp", tp_axis="tp",
+                      sp=True, pp=2)
+    with pytest.raises(ValueError, match="out of range"):
+        rank_coords(rank, cfg)
+
+
+def test_rank_coords_rejects_ranks_beyond_pipeline():
+    # world = pp * prod(axes): the first rank past the last pipeline
+    # stage's replicas is rejected (range check subsumes the pp bound)
+    cfg = ParallelCfg(axes={"dp": 2}, dp_axis="dp", pp=2)
+    assert rank_coords(3, cfg)["pp"] == 1      # last valid rank
+    with pytest.raises(ValueError, match="out of range"):
+        rank_coords(4, cfg)
+
+
+def test_schedule_matches_costmodel():
+    """_schedule inlines the roofline/ring cost model for speed; pin it
+    to costmodel.node_time so the two cannot silently diverge."""
+    from repro import TPU_V5E
+    from repro.core.costmodel import node_time
+    from repro.core.simulate import _schedule
+
+    w = Scenario(TINY).train(batch=8, seq=64).parallel(
+        dp=2, tp=2, sp=True).trace().workload
+    nodes = w.stage_nodes(0)
+    makespan, cbusy, mbusy = _schedule(nodes, TPU_V5E)
+    # reference replay using the public cost model
+    finish, free = {}, {"compute": 0.0, "comm": 0.0}
+    busy = {"compute": 0.0, "comm": 0.0}
+    for n in nodes:
+        dur = node_time(n, TPU_V5E)
+        stream = "comm" if n.comm is not None else "compute"
+        ready = max((finish.get(d, 0.0) for d in n.deps), default=0.0)
+        end = max(ready, free[stream]) + dur
+        finish[n.uid] = end
+        free[stream] = end
+        busy[stream] += dur
+    assert makespan == max(free.values())
+    assert cbusy == busy["compute"] and mbusy == busy["comm"]
+
+
+# ---- chakra export: pre-serialized stamping --------------------------------
+
+def test_export_ranks_splices_preserialized_stage(tmp_path):
+    tr = Scenario(TINY).train(batch=8, seq=64).parallel(
+        dp=2, tp=2, sp=True, pp=2, microbatches=2).trace()
+    n = tr.export_chakra(str(tmp_path), ranks=range(8))
+    assert n == 8
+    w = tr.workload
+    for rank in (0, 5, 7):
+        got = json.load(open(tmp_path / f"rank{rank}.json"))
+        coords = rank_coords(rank, w.cfg)
+        want = dict(export_stage(w, coords["pp"]))
+        want["rank"] = rank
+        want["coords"] = coords
+        assert got == want
+    # stamped traces for ranks of the same stage share the node body
+    r0 = json.load(open(tmp_path / "rank0.json"))
+    r1 = json.load(open(tmp_path / "rank1.json"))
+    assert r0["nodes"] == r1["nodes"] and r0["coords"] != r1["coords"]
+
+
+def test_export_ranks_rejects_bad_rank(tmp_path):
+    tr = Scenario(TINY).train(batch=8, seq=64).parallel(dp=2).trace()
+    with pytest.raises(ValueError, match="out of range"):
+        tr.export_chakra(str(tmp_path), ranks=[99])
