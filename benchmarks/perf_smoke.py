@@ -6,6 +6,10 @@ runner of any speed catches >2x regressions in either fast path:
 * **sweep** — a small Fig-8-style DSE study (fixed world, all
   factorizations, three operating points: mb=1, mb=4, recompute) on the
   reference sympy backend vs the compiled backend sharing one engine.
+* **schedule sweep** — the pipeline-schedule path: a pp>1 study sweeping
+  ``schedule=("1f1b", "interleaved", "zb-h1")`` (interleaved with two
+  virtual stages), sympy vs compiled — guards the schedule replay +
+  per-chunk phase timing added with the schedule subsystem.
 * **export** — per-rank Chakra stamping with the pre-serialized splice
   path vs the naive per-rank ``json.dump`` re-serialization it replaced.
 
@@ -28,6 +32,7 @@ WORLD = 16
 # CI thresholds: intentionally far below the locally measured ratios
 # (see BENCH_*.json) so only genuine >2x regressions trip them.
 MIN_SWEEP_RATIO = 3.0
+MIN_SCHED_RATIO = 2.0
 MIN_EXPORT_RATIO = 2.0
 
 
@@ -39,6 +44,14 @@ def _study(sc):
     n += len(sc.sweep(WORLD, microbatches=4))
     n += len(sc.sweep(WORLD, recompute=True))
     return n
+
+
+def _sched_study(sc):
+    """pp>1 schedule sweep: every factorization under three pipeline
+    schedules (interleaved with 2 virtual stages)."""
+    return len(sc.sweep(WORLD, microbatches=4,
+                        schedule=("1f1b", "interleaved", "zb-h1"),
+                        vstages=2))
 
 
 def _naive_export(w, out_dir, ranks):
@@ -72,6 +85,21 @@ def run(report):
         f"compiled sweep only {sweep_ratio:.1f}x vs sympy " \
         f"(floor {MIN_SWEEP_RATIO}x) — fast-path regression"
 
+    t0 = time.time()
+    ns_sym = _sched_study(sc.with_backend("sympy"))
+    ts_sym = time.time() - t0
+    t0 = time.time()
+    ns_cmp = _sched_study(sc)
+    ts_cmp = time.time() - t0
+    assert ns_sym == ns_cmp, (ns_sym, ns_cmp)
+    sched_ratio = ts_sym / ts_cmp
+    report("perf_smoke/schedule_sweep", ts_cmp * 1e6,
+           f"{ns_cmp / ts_cmp:.0f} pts/s compiled vs {ns_sym / ts_sym:.0f} "
+           f"sympy = {sched_ratio:.1f}x")
+    assert sched_ratio >= MIN_SCHED_RATIO, \
+        f"compiled schedule sweep only {sched_ratio:.1f}x vs sympy " \
+        f"(floor {MIN_SCHED_RATIO}x) — schedule-path regression"
+
     tr = sc.parallel(dp=16, tp=8, sp=True, pp=2, microbatches=2).trace()
     w = tr.workload
     ranks = range(w.cfg.world)                     # 256 ranks
@@ -97,6 +125,12 @@ def run(report):
                   "compiled_pts_per_sec": round(n_cmp / t_cmp, 1),
                   "sympy_pts_per_sec": round(n_sym / t_sym, 1),
                   "speedup": round(sweep_ratio, 2)},
+        "schedule_sweep": {"points": ns_cmp,
+                           "compiled_s": round(ts_cmp, 3),
+                           "sympy_s": round(ts_sym, 3),
+                           "compiled_pts_per_sec": round(ns_cmp / ts_cmp, 1),
+                           "sympy_pts_per_sec": round(ns_sym / ts_sym, 1),
+                           "speedup": round(sched_ratio, 2)},
         "export": {"ranks": len(ranks),
                    "stamp_ranks_per_sec": round(len(ranks) / t_stamp, 1),
                    "naive_ranks_per_sec": round(len(ranks) / t_naive, 1),

@@ -209,7 +209,9 @@ class Scenario:
     def parallel(self, *, dp: int = 1, tp: int = 1, pp: int = 1, cp: int = 1,
                  ep=False, sp: Optional[bool] = None,
                  fsdp: bool = False, zero1: bool = False,
-                 microbatches: int = 1) -> "Scenario":
+                 microbatches: int = 1,
+                 schedule: Optional[str] = None,
+                 vstages: Optional[int] = None) -> "Scenario":
         """Pick a point in the strategy space (paper §II-B / Table III).
 
         Mesh axes and their names are constructed here — no axis-name
@@ -218,7 +220,14 @@ class Scenario:
         axis (tokens<->experts AllToAll) and ``ep="tp"`` over the tensor
         axis; options whose axis is degenerate (``fsdp``/``zero1``/``ep``
         at degree 1) quietly turn off, which keeps sweep-style
-        enumeration free of special cases."""
+        enumeration free of special cases.  ``schedule``/``vstages``
+        select the pipeline schedule (see :meth:`schedule`); left unset
+        they inherit whatever an earlier :meth:`schedule` call picked."""
+        explicit_vstages = vstages is not None
+        if schedule is None:
+            schedule = self.cfg.schedule
+        if vstages is None:
+            vstages = self.cfg.vstages
         axes: dict[str, int] = {}
         if dp > 1:
             axes["dp"] = dp
@@ -240,7 +249,26 @@ class Scenario:
             ep_axis=ep_axis,
             fsdp=bool(fsdp and dp > 1),
             zero1=bool(zero1 and dp > 1),
-            pp=pp, microbatches=microbatches)
+            pp=pp, microbatches=microbatches,
+            schedule=schedule,
+            # an INHERITED chunking quietly resets when the schedule
+            # can't use it; an explicitly passed one goes through so
+            # ParallelCfg can reject the contradictory combination
+            vstages=vstages if (schedule == "interleaved" or explicit_vstages)
+            else 1)
+        return replace(self, cfg=cfg)
+
+    def schedule(self, name: str, *, vstages: Optional[int] = None) -> "Scenario":
+        """Select the pipeline schedule replayed by the simulator and
+        the memory/Chakra models: ``"gpipe"``, ``"1f1b"`` (default),
+        ``"interleaved"`` (Megatron virtual stages —
+        ``.schedule("interleaved", vstages=2)``), or ``"zb-h1"``
+        (zero-bubble with split backward).  Composable with
+        :meth:`parallel` in either order.  Passing ``vstages`` with a
+        non-interleaved schedule raises (the combination is
+        contradictory, not quietly ignorable)."""
+        cfg = replace(self.cfg, schedule=name,
+                      vstages=1 if vstages is None else vstages)
         return replace(self, cfg=cfg)
 
     def with_cfg(self, cfg: ParallelCfg) -> "Scenario":
@@ -288,7 +316,9 @@ class Scenario:
         Enumerates power-of-two (dp, tp, cp, pp)[+FSDP] factorizations
         (``enum_kw`` forwards to
         :func:`repro.core.dse.enumerate_configs`: ``max_tp``, ``max_pp``,
-        ``max_cp``, ``with_fsdp``, ``ep``, ``microbatches``), evaluates
+        ``max_cp``, ``with_fsdp``, ``ep``, ``microbatches``,
+        ``schedule`` — a name or an iterable of names to make the
+        pipeline schedule a swept dimension — and ``vstages``), evaluates
         every point, and returns a :class:`~repro.core.dse.SweepResult`
         sorted by step time with infeasible factorizations recorded on
         ``.skipped``.  With the default ``backend="compiled"`` the points
@@ -421,7 +451,8 @@ class Trace:
             graph = sc.builder().graph
             self._dist_report = distribute(graph, sc.cfg, self.env)
             self._plan = apply_pipeline(graph, sc.cfg.pp,
-                                        total_layers(sc.spec))
+                                        total_layers(sc.spec),
+                                        vstages=sc.cfg.vstages)
             self._graph = graph
         return self._graph
 
@@ -461,10 +492,18 @@ class Trace:
                 tuple(sorted(hw.efficiency.items())), hw.mem_capacity)
 
     def simulate(self, hw: HardwareProfile = TPU_V5E, *,
-                 recompute: bool = False) -> SimResult:
-        key = (self._hw_key(hw), recompute)
+                 recompute: bool = False,
+                 microbatches: Optional[int] = None,
+                 schedule: Optional[str] = None,
+                 vstages: Optional[int] = None) -> SimResult:
+        """Analytic step time; ``schedule``/``vstages``/``microbatches``
+        override the config's pipeline schedule for what-if analysis
+        without re-instantiating the workload."""
+        key = (self._hw_key(hw), recompute, microbatches, schedule, vstages)
         if key not in self._sim:
-            self._sim[key] = simulate(self.workload, hw, recompute=recompute)
+            self._sim[key] = simulate(self.workload, hw, recompute=recompute,
+                                      microbatches=microbatches,
+                                      schedule=schedule, vstages=vstages)
         return self._sim[key]
 
     def memory(self, *, stage: int = 0, recompute: bool = False,
@@ -504,15 +543,23 @@ class Trace:
     # ---- export ---------------------------------------------------------
     def export_chakra(self, out_dir: str,
                       ranks: Optional[Iterable[int]] = None, *,
-                      decompose_alltoall: bool = False) -> int:
-        """Write per-rank Chakra-schema JSON traces; returns file count."""
+                      decompose_alltoall: bool = False,
+                      expand_microbatches: bool = False) -> int:
+        """Write per-rank Chakra-schema JSON traces; returns file count.
+
+        ``expand_microbatches`` unrolls the configured pipeline schedule
+        into per-microbatch node instances (slot order preserved via
+        control deps) so downstream feeders replay the schedule."""
         return export_ranks(self.workload, out_dir, ranks,
-                            decompose_alltoall=decompose_alltoall)
+                            decompose_alltoall=decompose_alltoall,
+                            expand_microbatches=expand_microbatches)
 
     def chakra_stage(self, stage: int = 0, *,
-                     decompose_alltoall: bool = False) -> dict:
+                     decompose_alltoall: bool = False,
+                     expand_microbatches: bool = False) -> dict:
         return export_stage(self.workload, stage,
-                            decompose_alltoall=decompose_alltoall)
+                            decompose_alltoall=decompose_alltoall,
+                            expand_microbatches=expand_microbatches)
 
     # ---- one-line report (launch pre-flight) ----------------------------
     def summary(self, hw: HardwareProfile = TPU_V5E, *,

@@ -16,6 +16,7 @@ from .graphdist import apply_pipeline
 from .instantiate import Workload, instantiate
 from .matcher import CommStep, InfeasibleConfigError, match
 from .memory import MemoryReport, peak_memory
+from .schedules import SCHEDULES, Schedule, build_schedule, inflight_factor
 from .simulate import SimResult, simulate
 from .stg import Graph, GraphBuilder, add_optimizer, backward
 from .symbolic import Env, sym
@@ -28,7 +29,8 @@ __all__ = [
     "HardwareProfile", "ParallelCfg", "distribute", "SweepResult",
     "apply_pipeline", "Workload", "instantiate", "CommStep",
     "InfeasibleConfigError", "match", "MemoryReport",
-    "peak_memory", "SimResult", "simulate", "Graph", "GraphBuilder",
+    "peak_memory", "SCHEDULES", "Schedule", "build_schedule",
+    "inflight_factor", "SimResult", "simulate", "Graph", "GraphBuilder",
     "add_optimizer", "backward", "Env", "sym", "REPLICATED", "STensor",
     "ShardSpec", "generate",
 ]

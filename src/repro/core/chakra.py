@@ -12,6 +12,15 @@ representative (SPMD) records, so writing 32K rank files costs seconds,
 not cluster-hours — the paper's Fig 13 claim.  ``decompose_alltoall``
 reproduces the NCCL send/recv decomposition used for Kineto alignment
 in Table VII.
+
+``expand_microbatches`` additionally unrolls the configured pipeline
+schedule (:mod:`repro.core.schedules`): every fwd/bwd (or zero-bubble
+``bwd_in``/``bwd_w``) slot of the rank's stage timeline is stamped as a
+per-microbatch instance — ids offset by ``mb · stride`` so the
+``-uid`` recv-id scheme stays collision-free — chained by control deps
+in slot order, so a Chakra feeder replays exactly the chosen schedule
+(GPipe vs 1F1B vs interleaved vs ZB-H1) instead of a repeat-annotated
+single microbatch.
 """
 from __future__ import annotations
 
@@ -20,6 +29,7 @@ import os
 from typing import Iterable, Optional
 
 from .instantiate import NodeRec, Workload
+from .schedules import BWD, BWD_IN, BWD_W, FWD, build_schedule
 
 _COMM_TYPE = {
     "AllReduce": "ALL_REDUCE", "AllGather": "ALL_GATHER",
@@ -73,10 +83,15 @@ def node_to_chakra(n: NodeRec, *, decompose_alltoall: bool = False) -> list[dict
                        "pg_size": n.comm["group"]}}]
 
 
-def export_stage(w: Workload, stage: int, *, decompose_alltoall: bool = False) -> dict:
-    nodes: list[dict] = []
-    for n in w.stage_nodes(stage):
-        nodes.extend(node_to_chakra(n, decompose_alltoall=decompose_alltoall))
+def export_stage(w: Workload, stage: int, *, decompose_alltoall: bool = False,
+                 expand_microbatches: bool = False) -> dict:
+    if expand_microbatches:
+        nodes = _expanded_nodes(w, stage,
+                                decompose_alltoall=decompose_alltoall)
+    else:
+        nodes = []
+        for n in w.stage_nodes(stage):
+            nodes.extend(node_to_chakra(n, decompose_alltoall=decompose_alltoall))
     # cross-stage producers are satisfied by the recv side of Send/Recv
     # pairs; drop dangling dep ids so each per-rank trace is self-contained
     ids = {nd["id"] for nd in nodes}
@@ -84,6 +99,68 @@ def export_stage(w: Workload, stage: int, *, decompose_alltoall: bool = False) -
         nd["data_deps"] = [d for d in nd["data_deps"] if d in ids]
     return {"schema": "Chakra-json-v0.0.4", "workload": w.name,
             "stage": stage, "nodes": nodes}
+
+
+def _expanded_nodes(w: Workload, stage: int, *,
+                    decompose_alltoall: bool) -> list[dict]:
+    """Per-microbatch node instances in the rank's schedule-slot order.
+
+    Instance ids are ``uid + mb · stride`` (recv side ``-(uid + mb ·
+    stride)``) with ``stride > max uid``, so instances never collide
+    with each other or with their negated recv ids.  Data deps stay
+    within the same microbatch instance (a microbatch's backward
+    consumes its own forward's activations); once-per-step optimizer
+    nodes depend on EVERY microbatch instance of their producers (grad
+    accumulation).  Each slot's nodes carry a control dep on the last
+    node of the previous slot — that chain IS the schedule."""
+    cfg = w.cfg
+    sched = build_schedule(getattr(cfg, "schedule", "1f1b"), max(1, cfg.pp),
+                           cfg.microbatches, getattr(cfg, "vstages", 1))
+    stride = max((n.uid for n in w.nodes), default=0) + 1
+    mb = sched.microbatches
+
+    by_slot: dict[tuple[str, int], list[NodeRec]] = {}
+    for c in w.vstages_of(stage):
+        by_slot[(FWD, c)] = w.phase_nodes(stage, "fwd", c)
+        bwd = w.phase_nodes(stage, "bwd", c)
+        if sched.splits_backward:
+            by_slot[(BWD_IN, c)] = [n for n in bwd if not n.wgrad]
+            by_slot[(BWD_W, c)] = [n for n in bwd if n.wgrad]
+        else:
+            by_slot[(BWD, c)] = bwd
+    opt_nodes = w.phase_nodes(stage, "opt")
+    expanded_uids = {n.uid for recs in by_slot.values() for n in recs}
+
+    out: list[dict] = []
+    prev_tail: Optional[int] = None
+    for slot in sched.timelines[stage]:
+        recs = by_slot.get((slot.kind, slot.vstage))
+        if not recs:
+            continue
+        off = slot.mb * stride
+        for n in recs:
+            for nd in node_to_chakra(n, decompose_alltoall=decompose_alltoall):
+                inst = dict(nd)
+                inst["id"] = nd["id"] + off if nd["id"] > 0 else nd["id"] - off
+                inst["data_deps"] = [d + off if d > 0 else d - off
+                                     for d in nd["data_deps"]]
+                inst["ctrl_deps"] = [prev_tail] if prev_tail is not None else []
+                inst["attrs"] = {**nd["attrs"], "repeat": 1, "mb": slot.mb}
+                out.append(inst)
+        prev_tail = out[-1]["id"]
+    for n in opt_nodes:
+        for nd in node_to_chakra(n, decompose_alltoall=decompose_alltoall):
+            inst = dict(nd)
+            deps: list[int] = []
+            for d in nd["data_deps"]:
+                if d in expanded_uids:       # grads accumulate over all mbs
+                    deps.extend(d + k * stride for k in range(mb))
+                else:
+                    deps.append(d)
+            inst["data_deps"] = deps
+            inst["ctrl_deps"] = [prev_tail] if prev_tail is not None else []
+            out.append(inst)
+    return out
 
 
 def rank_coords(rank: int, cfg) -> dict:
@@ -114,7 +191,8 @@ def rank_coords(rank: int, cfg) -> dict:
 
 
 def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = None,
-                 *, decompose_alltoall: bool = False) -> int:
+                 *, decompose_alltoall: bool = False,
+                 expand_microbatches: bool = False) -> int:
     """Stamp per-rank Chakra JSON files (rank -> its stage's trace).
 
     Each stage's node array is serialized exactly ONCE; per rank only the
@@ -126,7 +204,9 @@ def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = Non
     world = cfg.world
     # pre-serialized stage bodies, open at the tail: '{... "nodes": [...]'
     stage_body = {
-        s: json.dumps(export_stage(w, s, decompose_alltoall=decompose_alltoall))[:-1]
+        s: json.dumps(export_stage(
+            w, s, decompose_alltoall=decompose_alltoall,
+            expand_microbatches=expand_microbatches))[:-1]
         for s in range(w.stages)}
     count = 0
     for rank in (ranks if ranks is not None else range(world)):

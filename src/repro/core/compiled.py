@@ -47,6 +47,7 @@ from .distribute import DistReport, ParallelCfg, distribute, guards_match, \
 from .graphdist import _stage_for_tags
 from .instantiate import NodeRec, Workload
 from .memory import MemoryReport
+from .schedules import inflight_factor
 from .stg import (CAT_COMM, Comm, CrossEntropy, Einsum, Graph, Map, Norm,
                   PScan, Reduce, ScatterAdd, SendRecv, Softmax, TopK, Update)
 from .symbolic import Env, prod
@@ -101,28 +102,30 @@ class _NodeProg:
     comm: Optional[tuple]  # (coll, axis, ref_tidx, other_axes w/ multiplicity)
     upd: Optional[tuple]   # (w_tidx, shard_axes, grad_axes) for Update ops
     fused: bool
+    wgrad: bool            # bwd node producing a weight grad (zb split)
 
 
 @dataclass
 class _SRProg:
-    """A pipeline Send/Recv synthesized for a (tensor, dst stage) edge."""
+    """A pipeline Send/Recv synthesized for a (tensor, dst chunk) edge."""
     src: int              # real tidx of the crossing tensor
     vid: int              # virtual tidx of the recv-side tensor
     name: str
     phase: str
     tags: dict
-    stage: int
+    stage: int            # physical stage (chunk % pp)
+    vstage: int           # destination chunk
 
 
 @dataclass
 class _Layout:
-    """Pipeline-cut execution plan for one ``pp`` value.
+    """Pipeline-cut execution plan for one ``(pp, vstages)`` pair.
 
     ``entries`` holds one pre-resolved template per emitted node —
     everything that does not depend on mesh degrees (uid, deps, stage,
     byte-index lists) is frozen here, so per-config replay is a tight
     loop of float sums over the local-size arrays."""
-    seq: list             # ("op", node_idx, stage, remapped_ins) | ("sr", _SRProg)
+    seq: list             # ("op", node_idx, stage, remapped_ins, chunk) | ("sr", _SRProg)
     src_of: dict          # virtual tidx -> real tidx
     entries: list = field(default_factory=list)
     stage_of: dict = field(default_factory=dict)   # node uid -> stage
@@ -148,7 +151,7 @@ class CostProgram:
         self.n_layers = n_layers
         self.guards = guards
         self.report = report
-        self._layouts: dict[int, _Layout] = {}
+        self._layouts: dict[tuple, _Layout] = {}   # (pp, vstages) -> layout
         self._point_cache: dict[tuple, tuple] = {}
         self._scratch: dict[tuple, Workload] = {}   # (thread id, pp) -> wl
 
@@ -217,7 +220,8 @@ class CostProgram:
                 name=op.name, kind=op.kind, category=op.category,
                 phase=op.phase, tags=dict(op.tags), ins=ins, outs=outs,
                 outb=outb, flop=flop, comm=comm, upd=upd,
-                fused=bool(op.tags.get("fused"))))
+                fused=bool(op.tags.get("fused")),
+                wgrad=any(t.kind == "grad" for t in op.outs)))
 
         # ---- bind: one lambdified evaluation of all coefficients ---------
         vals = _evaluate_exprs(exprs, env)
@@ -259,44 +263,48 @@ class CostProgram:
         return out
 
     # ---- pipeline layout (mirrors graphdist.apply_pipeline) --------------
-    def _layout(self, pp: int) -> _Layout:
-        lay = self._layouts.get(pp)
+    def _layout(self, pp: int, vstages: int = 1) -> _Layout:
+        vstages = max(1, vstages) if pp > 1 else 1
+        key = (pp, vstages)
+        lay = self._layouts.get(key)
         if lay is not None:
             return lay
         if pp <= 1:
-            seq = [("op", i, 0, p.ins) for i, p in enumerate(self.nodes)]
+            seq = [("op", i, 0, p.ins, 0) for i, p in enumerate(self.nodes)]
             lay = _Layout(seq=seq, src_of={})
         else:
-            producer_stage: dict[int, int] = {}
+            chunks = pp * vstages
+            producer_chunk: dict[int, int] = {}
             moved: dict[tuple, int] = {}
             src_of: dict[int, int] = {}
             seq: list = []
             vnext = self._nt
             for i, p in enumerate(self.nodes):
-                s = _stage_for_tags(p.tags, pp, self.n_layers)
+                c = _stage_for_tags(p.tags, chunks, self.n_layers)
+                s = c % pp
                 ins = list(p.ins)
                 for j, t in enumerate(ins):
-                    sp_ = producer_stage.get(t, -1)
-                    if sp_ in (-1, s):
+                    cp = producer_chunk.get(t, -1)
+                    if cp in (-1, c):
                         continue
-                    v = moved.get((t, s))
+                    v = moved.get((t, c))
                     if v is None:
                         v = vnext
                         vnext += 1
                         src_of[v] = t
                         seq.append(("sr", _SRProg(
                             src=t, vid=v,
-                            name=f"{self._tname[t]}_pp{sp_}to{s}",
-                            phase=p.phase, tags=p.tags, stage=s)))
-                        producer_stage[v] = s
-                        moved[(t, s)] = v
+                            name=f"{self._tname[t]}_pp{cp}to{c}",
+                            phase=p.phase, tags=p.tags, stage=s, vstage=c)))
+                        producer_chunk[v] = c
+                        moved[(t, c)] = v
                     ins[j] = v
-                seq.append(("op", i, s, tuple(ins)))
+                seq.append(("op", i, s, tuple(ins), c))
                 for t in p.outs:
-                    producer_stage[t] = s
+                    producer_chunk[t] = c
             lay = _Layout(seq=seq, src_of=src_of)
         self._freeze_entries(lay)
-        self._layouts[pp] = lay
+        self._layouts[key] = lay
         return lay
 
     def _kind(self, t: int) -> str:
@@ -307,8 +315,8 @@ class CostProgram:
 
     def _freeze_entries(self, lay: _Layout) -> None:
         """Resolve everything degree-independent into per-node templates:
-        (uid, name, kind, category, phase, stage, flop, ba_idx, outb_idx,
-        comm, deps, tags)."""
+        (uid, name, kind, category, phase, stage, vstage, wgrad, flop,
+        ba_idx, outb_idx, comm, deps, tags)."""
         src_of = lay.src_of
         prodn: dict[int, int] = {}
         uid = 0
@@ -323,12 +331,13 @@ class CostProgram:
                 dep = prodn.get(src)
                 lay.entries.append((
                     uid, srp.name, "SendRecv", CAT_COMM, srp.phase,
-                    srp.stage, None, ba, (src,), ("SendRecv", src),
+                    srp.stage, srp.vstage, False, None, ba, (src,),
+                    ("SendRecv", src),
                     (dep,) if dep is not None else (), srp.tags))
                 lay.stage_of[uid] = srp.stage
                 prodn[srp.vid] = uid
                 continue
-            _, i, s, ins = entry
+            _, i, s, ins, c = entry
             p = self.nodes[i]
             ba = tuple(self._real(src_of, t) for t in ins
                        if self._kind(t) != "index") + p.outb
@@ -336,8 +345,8 @@ class CostProgram:
             flop = p.flop if p.flop is None or p.flop[0] == "scale" \
                 else ("einsum", i)
             lay.entries.append((
-                uid, p.name, p.kind, p.category, p.phase, s, flop, ba,
-                p.outb, p.comm, deps, p.tags))
+                uid, p.name, p.kind, p.category, p.phase, s, c, p.wgrad,
+                flop, ba, p.outb, p.comm, deps, p.tags))
             lay.stage_of[uid] = s
             for t in p.outs:
                 prodn[t] = uid
@@ -354,20 +363,21 @@ class CostProgram:
         must take a fresh one."""
         mesh = cfg.mesh
         ln, lb = self._local(cfg)
-        lay = self._layout(cfg.pp)
+        vstages = getattr(cfg, "vstages", 1)
+        lay = self._layout(cfg.pp, vstages)
         mb = cfg.microbatches
         eins = self._eins_f
         gb = self._gb
         # scratch is keyed per thread: two serial sweeps sharing the
         # process-wide engine from different threads must not mutate the
         # same NodeRec objects mid-simulate
-        skey = (threading.get_ident(), cfg.pp) if reuse else None
+        skey = (threading.get_ident(), cfg.pp, vstages) if reuse else None
         scratch = self._scratch.get(skey) if reuse else None
         build = scratch is None
         nodes: list[NodeRec] = [] if build else scratch.nodes
         append = nodes.append
-        for k, (uid, nm, kind, cat, phase, s, flop, ba_ix, outb, cm, deps,
-                tags) in enumerate(lay.entries):
+        for k, (uid, nm, kind, cat, phase, s, vs, wgrad, flop, ba_ix, outb,
+                cm, deps, tags) in enumerate(lay.entries):
             if flop is None:
                 flops = 0.0
             elif flop[0] == "scale":
@@ -421,7 +431,8 @@ class CostProgram:
                             "group": group, "size": size, "wire": wire}
                 append(NodeRec(uid, nm, kind, cat, phase, s, flops, ba,
                                out_b, comm, deps, repeat,
-                               tags if reuse else dict(tags)))
+                               tags if reuse else dict(tags),
+                               vstage=vs, wgrad=wgrad))
             else:
                 rec = nodes[k]
                 rec.flops = flops
@@ -451,10 +462,10 @@ class CostProgram:
         return scratch
 
     # ---- numeric peak memory (mirrors memory.peak_memory) -----------------
-    def _mem_static(self, pp: int, stage: int) -> tuple:
-        """Degree-independent lifetime structure for one (pp, stage):
-        (weight tidxs, Update recipes, activation intervals)."""
-        lay = self._layout(pp)
+    def _mem_static(self, pp: int, vstages: int, stage: int) -> tuple:
+        """Degree-independent lifetime structure for one (pp, vstages,
+        stage): (weight tidxs, Update recipes, activation intervals)."""
+        lay = self._layout(pp, vstages)
         cached = lay.mem_static.get(stage)
         if cached is not None:
             return cached
@@ -515,7 +526,8 @@ class CostProgram:
                     grad_dtype: str = "fp32") -> MemoryReport:
         mesh = cfg.mesh
         _, lb = self._local(cfg)
-        w_idx, upds, acts = self._mem_static(cfg.pp, stage)
+        w_idx, upds, acts = self._mem_static(cfg.pp, getattr(cfg, "vstages", 1),
+                                             stage)
 
         weights = grads = opt_states = master = 0.0
         for t in w_idx:
@@ -552,13 +564,14 @@ class CostProgram:
             cur += delta
             if cur > peak:
                 peak = cur
-        pp = cfg.pp
-        inflight = min(cfg.microbatches, pp - stage) if pp > 1 else 1
+        inflight = inflight_factor(getattr(cfg, "schedule", "1f1b"), cfg.pp,
+                                   cfg.microbatches,
+                                   getattr(cfg, "vstages", 1), stage)
         extra = max(layer_act.values(), default=0.0) if recompute else 0.0
         return MemoryReport(weights=weights, grads=grads,
                             opt_states=opt_states, master_params=master,
                             peak_activation=peak,
-                            inflight_factor=max(1, inflight),
+                            inflight_factor=inflight,
                             recompute_extra=extra)
 
 

@@ -27,7 +27,8 @@ from typing import Optional
 
 import sympy as sp
 
-from .matcher import _canon, insert_comms
+from .matcher import InfeasibleConfigError, _canon, insert_comms
+from .schedules import SCHEDULES, build_schedule
 from .stg import (CAT_COMM, Comm, CrossEntropy, Dispatch, Einsum, Embed, Graph,
                   GraphBuilder, Map, Norm, Op, PScan, Reduce, Reshape,
                   ScatterAdd, Softmax, SliceLike, TopK, Transpose, Update)
@@ -48,6 +49,8 @@ class ParallelCfg:
     zero1: bool = False                # ZeRO-1 optimizer sharding over dp_axis
     pp: int = 1                        # pipeline stages (graph-level)
     microbatches: int = 1              # pipeline microbatches per step
+    schedule: str = "1f1b"             # pipeline schedule (see core.schedules)
+    vstages: int = 1                   # virtual stages/chunks (interleaved)
 
     def __post_init__(self):
         for ax in (self.dp_axis, self.tp_axis, self.cp_axis, self.ep_axis):
@@ -57,6 +60,35 @@ class ParallelCfg:
             raise ValueError("sequence parallelism requires tensor parallelism")
         if (self.fsdp or self.zero1) and not self.dp_axis:
             raise ValueError("FSDP/ZeRO-1 require a dp axis")
+        if self.microbatches < 1:
+            raise ValueError(f"microbatches must be >= 1, got {self.microbatches}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule {self.schedule!r} not in {SCHEDULES}")
+        if self.vstages < 1:
+            raise ValueError(f"vstages must be >= 1, got {self.vstages}")
+        if self.vstages > 1 and self.schedule != "interleaved":
+            raise ValueError(
+                f"vstages={self.vstages} requires schedule='interleaved' "
+                f"(got {self.schedule!r})")
+
+    def validate_workload(self, batch: Optional[int] = None) -> None:
+        """Feasibility checks that need the workload shape (called by DSE
+        sweeps before evaluating a point; raises
+        :class:`~repro.core.matcher.InfeasibleConfigError` so the point
+        is recorded as skipped instead of silently producing fractional
+        microbatch work)."""
+        if batch is not None:
+            dp = self.degree(self.dp_axis)
+            # mirrors _act_input_spec: a batch dim that does not divide
+            # dp is left unsharded (replicated), so every rank then
+            # owns the FULL batch and that is what microbatches must cut
+            per_rank = batch // dp if batch % dp == 0 else batch
+            if per_rank % self.microbatches != 0:
+                raise InfeasibleConfigError(
+                    f"microbatches={self.microbatches} does not divide the "
+                    f"per-dp-rank batch {per_rank} (batch={batch}, dp={dp})")
+        # interleaved needs microbatches % pp == 0 (raised by the generator)
+        build_schedule(self.schedule, self.pp, self.microbatches, self.vstages)
 
     @property
     def mesh(self) -> dict[str, int]:
@@ -79,7 +111,11 @@ class ParallelCfg:
             if ax:
                 bits.append(f"{k}={self.axes[ax]}")
         if self.pp > 1:
-            bits.append(f"PP={self.pp}")
+            sched = "" if self.schedule == "1f1b" else f"/{self.schedule}"
+            vs = f"v{self.vstages}" if self.vstages > 1 else ""
+            bits.append(f"PP={self.pp}{sched}{vs}")
+        if self.microbatches > 1:
+            bits.append(f"mb={self.microbatches}")
         if self.sp:
             bits.append("SP")
         if self.fsdp:

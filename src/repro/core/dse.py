@@ -46,7 +46,7 @@ from .instantiate import Workload, instantiate
 from .matcher import InfeasibleConfigError
 from .memory import MemoryReport, peak_memory
 from .simulate import SimResult, simulate
-from .symbolic import Env
+from .symbolic import Env, sym
 
 
 @dataclass
@@ -103,8 +103,16 @@ def _pow2_divisors(n: int) -> list[int]:
 def enumerate_configs(world: int, *, max_tp: int = 64, max_pp: int = 64,
                       max_cp: int = 64, with_fsdp: bool = True,
                       ep: Optional[int] = None,
-                      microbatches: int = 1) -> Iterable[ParallelCfg]:
-    """All (dp, tp, cp, pp) power-of-two factorizations of ``world``."""
+                      microbatches: int = 1,
+                      schedule="1f1b", vstages: int = 1) -> Iterable[ParallelCfg]:
+    """All (dp, tp, cp, pp) power-of-two factorizations of ``world``.
+
+    ``schedule`` may be a single name or an iterable of names from
+    :data:`repro.core.schedules.SCHEDULES` — the latter makes the
+    pipeline schedule one more swept dimension (each factorization is
+    enumerated once per schedule).  ``vstages`` applies to interleaved
+    points (other schedules have no chunking)."""
+    scheds = (schedule,) if isinstance(schedule, str) else tuple(schedule)
     for tp in _pow2_divisors(world):
         if tp > max_tp:
             continue
@@ -126,15 +134,19 @@ def enumerate_configs(world: int, *, max_tp: int = 64, max_pp: int = 64,
                         axes["cp"] = cp
                     if ep and dp % ep == 0 and dp > 1:
                         pass  # EP reuses the dp axis (tokens<->experts A2A)
-                    yield ParallelCfg(
-                        axes=axes,
-                        dp_axis="dp" if dp > 1 else None,
-                        tp_axis="tp" if tp > 1 else None,
-                        sp=tp > 1,
-                        cp_axis="cp" if cp > 1 else None,
-                        ep_axis="dp" if (ep and dp > 1) else None,
-                        fsdp=fsdp, pp=pp,
-                        microbatches=microbatches)
+                    # schedules only differentiate pipelined points
+                    for sched in (scheds if pp > 1 else scheds[:1]):
+                        yield ParallelCfg(
+                            axes=axes,
+                            dp_axis="dp" if dp > 1 else None,
+                            tp_axis="tp" if tp > 1 else None,
+                            sp=tp > 1,
+                            cp_axis="cp" if cp > 1 else None,
+                            ep_axis="dp" if (ep and dp > 1) else None,
+                            fsdp=fsdp, pp=pp,
+                            microbatches=microbatches,
+                            schedule=sched,
+                            vstages=vstages if sched == "interleaved" else 1)
 
 
 def evaluate_point(build: Callable[[], tuple], cfg: ParallelCfg, env: Env,
@@ -145,7 +157,7 @@ def evaluate_point(build: Callable[[], tuple], cfg: ParallelCfg, env: Env,
     each call (graphs are mutated)."""
     graph = build()
     distribute(graph, cfg, env)
-    plan = apply_pipeline(graph, cfg.pp, n_layers)
+    plan = apply_pipeline(graph, cfg.pp, n_layers, vstages=cfg.vstages)
     w = instantiate(graph, cfg, env, plan, name=f"{name}/{cfg.describe()}")
     sim = simulate(w, hw, recompute=recompute)
     mem = peak_memory(graph, cfg, env, plan, recompute=recompute)
@@ -179,8 +191,14 @@ def evaluate_or_skip(cfg: ParallelCfg, *, env: Env, hw: HardwareProfile,
     chunks, process chunks): returns a :class:`DSEPoint` (OOM-labelled
     when over ``mem_limit_gb``) or a :class:`SkippedConfig` when the
     factorization is infeasible.  Exactly one of ``engine`` (compiled)
-    or ``build`` (sympy reference) must be provided."""
+    or ``build`` (sympy reference) must be provided.
+
+    Before evaluating, the microbatching is checked against the bound
+    workload (``microbatches`` must divide the per-dp-rank batch;
+    interleaved schedules need ``microbatches % pp == 0``) so fractional
+    microbatch work is skipped-with-reason rather than silently scored."""
     try:
+        cfg.validate_workload(batch=env.get(sym("B")))
         if engine is not None:
             pt = evaluate_point_compiled(engine, cfg, hw,
                                          recompute=recompute, name=name,

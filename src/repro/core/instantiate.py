@@ -35,7 +35,7 @@ class NodeRec:
     kind: str                   # op class name
     category: str               # GeMM | Attn | ElementWise | Others | Comm
     phase: str                  # fwd | bwd | opt
-    stage: int
+    stage: int                  # physical pipeline stage
     flops: float = 0.0
     bytes_accessed: float = 0.0
     out_bytes: float = 0.0
@@ -43,6 +43,10 @@ class NodeRec:
     deps: tuple[int, ...] = ()          # uids of producer nodes (same rank)
     repeat: int = 1                     # executions per training step
     tags: dict = field(default_factory=dict)
+    vstage: int = 0             # virtual stage/chunk (== stage unless
+                                # the plan interleaves; chunk % pp == stage)
+    wgrad: bool = False         # bwd node producing a weight grad (the
+                                # deferrable half zero-bubble schedules split)
 
 
 @dataclass
@@ -96,6 +100,18 @@ class Workload:
     def stage_nodes(self, stage: int) -> list[NodeRec]:
         return [n for n in self.nodes if n.stage == stage]
 
+    def phase_nodes(self, stage: int = 0, phase: str = "fwd",
+                    vstage: Optional[int] = None) -> list[NodeRec]:
+        """Nodes of one phase on a (virtual) stage, in execution order —
+        the per-chunk slot bodies the schedule replay times."""
+        return [n for n in self.nodes
+                if n.stage == stage and n.phase == phase
+                and (vstage is None or n.vstage == vstage)]
+
+    def vstages_of(self, stage: int) -> list[int]:
+        """Virtual-stage (chunk) ids hosted by ``stage``, ascending."""
+        return sorted({n.vstage for n in self.nodes if n.stage == stage})
+
     @property
     def stages(self) -> int:
         return max((n.stage for n in self.nodes), default=0) + 1
@@ -107,11 +123,13 @@ def instantiate(graph: Graph, cfg: ParallelCfg, env: Env,
     """Ground the distributed STG into a numeric per-stage workload."""
     mesh = cfg.mesh
     stage_of_op = plan.op_stage if plan else {}
+    vstage_of_op = plan.op_vstage if plan else {}
     nodes: list[NodeRec] = []
     producer_node: dict[int, int] = {}          # tensor uid -> node uid
 
     for op in graph.ops:
         stage = stage_of_op.get(op.uid, 0)
+        vstage = vstage_of_op.get(op.uid, stage)
         deps = tuple(sorted({producer_node[t.uid] for t in op.ins
                              if t.uid in producer_node}))
         comm = None
@@ -138,6 +156,8 @@ def instantiate(graph: Graph, cfg: ParallelCfg, env: Env,
             bytes_accessed=op.bytes_accessed(env, mesh),
             out_bytes=out_bytes,
             comm=comm, deps=deps, repeat=repeat, tags=dict(op.tags),
+            vstage=vstage,
+            wgrad=any(t.kind == "grad" for t in op.outs),
         )
         nodes.append(rec)
         for t in op.outs:

@@ -13,8 +13,11 @@ quantity directly on the instantiated graph:
   their last *forward* consumer; with ``recompute`` (Fig 11) every
   activation dies at the end of its layer's forward and the backward
   working set is bounded by one layer's activations.
-* **Pipeline in-flight factor** — with 1F1B, stage ``s`` keeps
-  ``min(microbatches, pp - s)`` microbatches of activations alive.
+* **Pipeline in-flight factor** — derived from the configured pipeline
+  schedule's slot timeline (:mod:`repro.core.schedules`): 1F1B keeps
+  ``min(microbatches, pp - s)`` microbatches of activations alive on
+  stage ``s``, GPipe all ``microbatches``, interleaved a fractional
+  chunk count, ZB-H1 the 1F1B bound (activations die at ``bwd_in``).
 
 This is the REFERENCE memory model; ``CostProgram.peak_memory`` in
 :mod:`repro.core.compiled` mirrors it term-for-term (same accumulation
@@ -27,6 +30,7 @@ from dataclasses import dataclass
 
 from .distribute import ParallelCfg
 from .graphdist import PipelinePlan
+from .schedules import inflight_factor
 from .stg import Comm, Graph, Update
 from .symbolic import Env, prod
 from .tensor import DTYPE_BYTES, STensor
@@ -39,7 +43,7 @@ class MemoryReport:
     opt_states: float
     master_params: float
     peak_activation: float
-    inflight_factor: int
+    inflight_factor: float      # schedule-derived (fractional: interleaved)
     recompute_extra: float
 
     @property
@@ -127,9 +131,11 @@ def peak_memory(graph: Graph, cfg: ParallelCfg, env: Env,
         peak = max(peak, cur)
 
     pp = plan.pp if plan else 1
-    inflight = min(cfg.microbatches, pp - stage) if pp > 1 else 1
+    inflight = inflight_factor(getattr(cfg, "schedule", "1f1b"), pp,
+                               cfg.microbatches, getattr(cfg, "vstages", 1),
+                               stage)
     recompute_extra = max(layer_act.values(), default=0.0) if recompute else 0.0
     return MemoryReport(weights=weights, grads=grads, opt_states=opt_states,
                         master_params=master, peak_activation=peak,
-                        inflight_factor=max(1, inflight),
+                        inflight_factor=inflight,
                         recompute_extra=recompute_extra)

@@ -7,34 +7,60 @@ independent collectives hide behind compute (the FSDP observation of
 paper Fig 10 falls out of this naturally — weight AllGathers depend only
 on root weights and prefetch arbitrarily early).
 
-Pipeline parallelism uses the standard 1F1B closed form on top of the
-per-stage microbatch time: ``T ≈ (M + P - 1) · max_stage(t_mb) + t_opt``.
+Pipeline parallelism replays the configured schedule
+(:mod:`repro.core.schedules`): per (virtual) stage the two-stream
+scheduler times the forward / backward (/ split weight-grad) slot
+bodies — cross-stage SendRecv landing costs included in the receiving
+chunk's slot — and the numeric schedule replay chains the slots through
+their cross-stage dependencies.  Because the replay consumes only
+per-slot durations, both evaluation backends (sympy reference and
+compiled) share it unchanged and stay bit-identical.
+
+Time-accounting semantics (pinned by tests/test_schedules.py):
+
+* ``step_time``    — schedule makespan (pp=1: ``M · t_mb``) + optimizer.
+* ``compute_time`` — max over stages of per-step compute-stream busy
+  time: microbatch compute × M + optimizer compute (the optimizer runs
+  ONCE per step, not per microbatch).
+* ``comm_time`` / ``exposed_comm`` — same accounting on the comm stream.
+* ``bubble_fraction`` — fraction of stage-time idle during the
+  microbatch portion of the schedule (0 when pp == 1).
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
 
 from .costmodel import HardwareProfile
 from .instantiate import NodeRec, Workload
+from .schedules import BWD, BWD_IN, BWD_W, FWD, build_schedule, replay
 
 
 @dataclass
 class StageSim:
-    t_microbatch: float
+    t_fwd: float                 # per-microbatch forward span (all chunks)
+    t_bwd: float                 # per-microbatch backward span (all chunks)
     t_opt: float
-    compute_busy: float
-    comm_busy: float
-    exposed_comm: float
+    compute_busy: float          # per-microbatch compute-stream busy (no opt)
+    comm_busy: float             # per-microbatch comm-stream busy (no opt)
+    exposed_comm: float          # per-microbatch comm not hidden by compute
+    opt_compute: float = 0.0     # once-per-step optimizer busy times
+    opt_comm: float = 0.0
+    opt_exposed: float = 0.0
+
+    @property
+    def t_microbatch(self) -> float:
+        return self.t_fwd + self.t_bwd
 
 
 @dataclass
 class SimResult:
     step_time: float
-    compute_time: float          # critical-path compute (max stage)
-    comm_time: float             # total comm busy time (max stage)
-    exposed_comm: float
+    compute_time: float          # max-stage per-step compute busy
+    comm_time: float             # max-stage per-step comm busy
+    exposed_comm: float          # max-stage per-step exposed comm
     overlap_ratio: float         # fraction of comm hidden under compute
+    bubble_fraction: float = 0.0  # pipeline idle fraction (microbatch part)
+    schedule: str = "1f1b"
     stages: list[StageSim] = field(default_factory=list)
 
     @property
@@ -94,39 +120,130 @@ def _schedule(nodes: list[NodeRec], hw: HardwareProfile) -> tuple[float, float, 
     return makespan, busy_comp, busy_comm
 
 
+def _span3(nodes: list[NodeRec], hw: HardwareProfile) -> tuple[float, float, float, float]:
+    """(span, compute busy, comm busy, exposed comm) for one slot body."""
+    span, cbusy, mbusy = _schedule(nodes, hw)
+    return span, cbusy, mbusy, max(0.0, span - cbusy)
+
+
 def simulate(w: Workload, hw: HardwareProfile, *,
              microbatches: int | None = None,
-             recompute: bool = False) -> SimResult:
-    mb = microbatches if microbatches is not None else w.cfg.microbatches
-    pp = max(1, w.cfg.pp)
+             recompute: bool = False,
+             schedule: str | None = None,
+             vstages: int | None = None) -> SimResult:
+    """Analytic step time under ``w.cfg``'s pipeline schedule.
+
+    ``schedule``/``vstages``/``microbatches`` override the config's
+    values (what-if analysis without re-instantiating the workload).
+    Overrides must match the chunk assignment baked into the workload by
+    the pipeline cut: an interleaved-cut workload (``cfg.vstages > 1``)
+    can only replay interleaved at the same ``vstages``."""
+    cfg = w.cfg
+    mb = microbatches if microbatches is not None else cfg.microbatches
+    pp = max(1, cfg.pp)
+    sched_name = schedule or getattr(cfg, "schedule", "1f1b")
+    wl_v = getattr(cfg, "vstages", 1)
+    v = vstages if vstages is not None else wl_v
+
+    if pp <= 1:
+        return _simulate_single(w, hw, mb, recompute, sched_name)
+    if v != wl_v or (sched_name != "interleaved" and wl_v > 1):
+        raise ValueError(
+            f"schedule override {sched_name!r}/vstages={v} does not match "
+            f"the workload's pipeline cut (vstages={wl_v}); build a new "
+            f"trace with .schedule(...) instead")
+
+    sched = build_schedule(sched_name, pp, mb, v)
+    split_bwd = sched.splits_backward
+
     stage_sims: list[StageSim] = []
+    dur: dict[tuple[str, int], float] = {}      # (slot kind, chunk) -> span
     for s in range(w.stages):
         nodes = w.stage_nodes(s)
-        mb_nodes = [n for n in nodes if n.phase in ("fwd", "bwd")]
-        if recompute:
-            # activation recompute re-runs the forward during backward
-            extra = [n for n in nodes if n.phase == "fwd" and n.comm is None]
-            mb_nodes = mb_nodes + extra
-        opt_nodes = [n for n in nodes if n.phase == "opt"]
-        span, cbusy, mbusy = _schedule(mb_nodes, hw)
+        fwd_c: dict[int, list[NodeRec]] = {}
+        bwd_c: dict[int, list[NodeRec]] = {}
+        opt_nodes: list[NodeRec] = []
+        for n in nodes:
+            if n.phase == "fwd":
+                fwd_c.setdefault(n.vstage, []).append(n)
+            elif n.phase == "bwd":
+                bwd_c.setdefault(n.vstage, []).append(n)
+            else:
+                opt_nodes.append(n)
+        t_fwd = t_bwd = cbusy = mbusy = exposed = 0.0
+        for c in sorted(set(fwd_c) | set(bwd_c)):
+            fwd = fwd_c.get(c, [])
+            bwd = bwd_c.get(c, [])
+            f_span, f_cb, f_mb, f_exp = _span3(fwd, hw)
+            dur[(FWD, c)] = f_span
+            if recompute:
+                # activation recompute re-runs the forward during backward
+                bwd = bwd + [n for n in fwd if n.comm is None]
+            if split_bwd:
+                b_in = [n for n in bwd if not n.wgrad]
+                b_w = [n for n in bwd if n.wgrad]
+                bi_span, bi_cb, bi_mb, bi_exp = _span3(b_in, hw)
+                bw_span, bw_cb, bw_mb, bw_exp = _span3(b_w, hw)
+                dur[(BWD_IN, c)] = bi_span
+                dur[(BWD_W, c)] = bw_span
+                b_span = bi_span + bw_span
+                b_cb, b_mb, b_exp = bi_cb + bw_cb, bi_mb + bw_mb, bi_exp + bw_exp
+            else:
+                b_span, b_cb, b_mb, b_exp = _span3(bwd, hw)
+                dur[(BWD, c)] = b_span
+            t_fwd += f_span
+            t_bwd += b_span
+            cbusy += f_cb + b_cb
+            mbusy += f_mb + b_mb
+            exposed += f_exp + b_exp
         opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw)
-        exposed = max(0.0, span - cbusy)
         stage_sims.append(StageSim(
-            t_microbatch=span, t_opt=opt_span,
-            compute_busy=cbusy + ocbusy, comm_busy=mbusy + ombusy,
-            exposed_comm=exposed + max(0.0, opt_span - ocbusy)))
+            t_fwd=t_fwd, t_bwd=t_bwd, t_opt=opt_span,
+            compute_busy=cbusy, comm_busy=mbusy, exposed_comm=exposed,
+            opt_compute=ocbusy, opt_comm=ombusy,
+            opt_exposed=max(0.0, opt_span - ocbusy)))
 
-    t_mb = max(s.t_microbatch for s in stage_sims)
+    rep = replay(sched, lambda slot: dur.get((slot.kind, slot.vstage), 0.0))
     t_opt = max(s.t_opt for s in stage_sims)
-    step = (mb + pp - 1) * t_mb + t_opt if pp > 1 else mb * t_mb + t_opt
-    comm_busy = max(s.comm_busy for s in stage_sims)
-    compute_busy = max(s.compute_busy for s in stage_sims)
-    exposed = max(s.exposed_comm for s in stage_sims)
-    hidden = max(0.0, comm_busy - exposed)
+    step = rep.makespan + t_opt
+    return _result(step, mb, stage_sims, rep.bubble_fraction, sched_name)
+
+
+def _simulate_single(w: Workload, hw: HardwareProfile, mb: int,
+                     recompute: bool, sched_name: str) -> SimResult:
+    """pp == 1: no pipeline — one combined fwd+bwd span per microbatch
+    (kept on the exact pre-schedule-refactor arithmetic: the bulk of any
+    DSE sweep is pp == 1 points and this is their hot path)."""
+    nodes = w.stage_nodes(0)
+    mb_nodes = [n for n in nodes if n.phase in ("fwd", "bwd")]
+    if recompute:
+        extra = [n for n in nodes if n.phase == "fwd" and n.comm is None]
+        mb_nodes = mb_nodes + extra
+    opt_nodes = [n for n in nodes if n.phase == "opt"]
+    span, cbusy, mbusy = _schedule(mb_nodes, hw)
+    opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw)
+    st = StageSim(
+        t_fwd=span, t_bwd=0.0, t_opt=opt_span,
+        compute_busy=cbusy, comm_busy=mbusy,
+        exposed_comm=max(0.0, span - cbusy),
+        opt_compute=ocbusy, opt_comm=ombusy,
+        opt_exposed=max(0.0, opt_span - ocbusy))
+    step = mb * span + opt_span
+    return _result(step, mb, [st], 0.0, sched_name)
+
+
+def _result(step: float, mb: int, stage_sims: list[StageSim],
+            bubble: float, sched_name: str) -> SimResult:
+    compute = max(s.compute_busy * mb + s.opt_compute for s in stage_sims)
+    comm = max(s.comm_busy * mb + s.opt_comm for s in stage_sims)
+    exposed = max(s.exposed_comm * mb + s.opt_exposed for s in stage_sims)
+    hidden = max(0.0, comm - exposed)
     return SimResult(
         step_time=step,
-        compute_time=compute_busy * (mb if pp == 1 else mb),
-        comm_time=comm_busy * mb,
-        exposed_comm=exposed * mb,
-        overlap_ratio=(hidden / comm_busy) if comm_busy > 0 else 1.0,
+        compute_time=compute,
+        comm_time=comm,
+        exposed_comm=exposed,
+        overlap_ratio=(hidden / comm) if comm > 0 else 1.0,
+        bubble_fraction=bubble,
+        schedule=sched_name,
         stages=stage_sims)

@@ -1,0 +1,323 @@
+"""Pipeline-schedule subsystem: IR generators, timing replay, in-flight
+memory factors, microbatch feasibility validation, pinned compute/comm
+time-accounting semantics, and the schedule-aware Chakra export."""
+import json
+
+import pytest
+
+from repro import InfeasibleConfigError, ParallelCfg, Scenario, TPU_V5E
+from repro.core import ModelSpec
+from repro.core.schedules import (SCHEDULES, build_schedule, inflight_factor,
+                                  replay)
+
+TINY = ModelSpec(name="tiny", n_layers=4, d_model=256, n_heads=8,
+                 n_kv_heads=4, d_ff=512, vocab=4096)
+
+
+def _uniform_dur(tf=1.0, tb=2.0, v=1):
+    """Per-slot durations for a uniform pipeline (chunks carry 1/v of a
+    stage; zb splits backward evenly)."""
+    def dur(slot):
+        if slot.kind == "fwd":
+            return tf / v
+        if slot.kind == "bwd":
+            return tb / v
+        return tb / (2 * v)          # bwd_in / bwd_w
+    return dur
+
+
+# ---- IR generators ---------------------------------------------------------
+
+@pytest.mark.parametrize("pp,mb", [(2, 4), (4, 8), (8, 16), (4, 2)])
+def test_1f1b_inflight_matches_closed_form(pp, mb):
+    for s in range(pp):
+        assert inflight_factor("1f1b", pp, mb, 1, s) == min(mb, pp - s)
+
+
+def test_gpipe_holds_all_microbatches():
+    for s in range(4):
+        assert inflight_factor("gpipe", 4, 8, 1, s) == 8
+
+
+def test_zb_h1_matches_1f1b_memory():
+    # zero-bubble H1's selling point: activations die at bwd_in, so the
+    # in-flight bound equals 1F1B's
+    for s in range(4):
+        assert inflight_factor("zb-h1", 4, 8, 1, s) == \
+               inflight_factor("1f1b", 4, 8, 1, s)
+
+
+def test_interleaved_inflight_exceeds_1f1b():
+    # Megatron's documented memory penalty for virtual stages
+    for s in range(4):
+        assert inflight_factor("interleaved", 4, 8, 2, s) > \
+               inflight_factor("1f1b", 4, 8, 1, s)
+
+
+def test_every_slot_appears_exactly_once():
+    for name in SCHEDULES:
+        sched = build_schedule(name, 4, 8, 2 if name == "interleaved" else 1)
+        for s, tl in enumerate(sched.timelines):
+            fwd = [(x.mb, x.vstage) for x in tl if x.kind == "fwd"]
+            rel = [(x.mb, x.vstage) for x in tl if x.kind in ("bwd", "bwd_in")]
+            assert len(fwd) == len(set(fwd)) == 8 * sched.vstages, (name, s)
+            assert sorted(fwd) == sorted(rel), (name, s)
+            for x in tl:
+                assert x.vstage % sched.pp == s, (name, x)
+
+
+# ---- timing replay ---------------------------------------------------------
+
+def test_1f1b_replay_equals_closed_form_uniform():
+    for pp, mb in ((2, 4), (4, 8), (8, 16)):
+        rep = replay(build_schedule("1f1b", pp, mb), _uniform_dur())
+        assert rep.makespan == pytest.approx((mb + pp - 1) * 3.0)
+
+
+def test_bubble_ordering_uniform():
+    pp, mb = 4, 8
+    bubbles = {}
+    for name in SCHEDULES:
+        v = 2 if name == "interleaved" else 1
+        rep = replay(build_schedule(name, pp, mb, v), _uniform_dur(v=v))
+        bubbles[name] = rep.bubble_fraction
+    assert bubbles["gpipe"] >= bubbles["1f1b"] - 1e-12
+    assert bubbles["1f1b"] > bubbles["interleaved"]
+    assert bubbles["interleaved"] > bubbles["zb-h1"]
+
+
+def test_zb_h1_replay_hits_theoretical_bubble():
+    # ZB-H1 bubble = (pp-1) * (tf + tb_in - tb_w)   [Qi et al.]
+    pp, mb, tf, tb = 4, 8, 1.0, 2.0
+    rep = replay(build_schedule("zb-h1", pp, mb), _uniform_dur(tf, tb))
+    assert rep.makespan == pytest.approx(mb * (tf + tb) + (pp - 1) * tf)
+
+
+def test_interleaved_requires_divisible_microbatches():
+    with pytest.raises(InfeasibleConfigError, match="divisible"):
+        build_schedule("interleaved", 4, 6, 2)
+
+
+# ---- ParallelCfg validation ------------------------------------------------
+
+def test_cfg_rejects_bad_schedule_fields():
+    with pytest.raises(ValueError, match="schedule"):
+        ParallelCfg(schedule="pipedream")
+    with pytest.raises(ValueError, match="microbatches"):
+        ParallelCfg(microbatches=0)
+    with pytest.raises(ValueError, match="interleaved"):
+        ParallelCfg(schedule="1f1b", vstages=2)
+
+
+def test_cfg_describe_includes_microbatches_and_schedule():
+    cfg = ParallelCfg(axes={"dp": 2}, dp_axis="dp", pp=4, microbatches=8,
+                      schedule="interleaved", vstages=2)
+    d = cfg.describe()
+    assert "mb=8" in d and "interleaved" in d and "v2" in d
+    # default schedule stays out of the label (backward compatible)
+    assert "1f1b" not in ParallelCfg(pp=2, microbatches=4).describe()
+
+
+def test_validate_workload_microbatch_divisibility():
+    cfg = ParallelCfg(axes={"dp": 4}, dp_axis="dp", microbatches=3)
+    with pytest.raises(InfeasibleConfigError, match="per-dp-rank"):
+        cfg.validate_workload(batch=16)          # 16/4 = 4, 4 % 3 != 0
+    cfg.validate_workload(batch=24)              # 24/4 = 6 — fine
+
+
+def test_sweep_skips_indivisible_microbatching():
+    res = Scenario(TINY).train(batch=16, seq=64).sweep(16, microbatches=4)
+    assert any("per-dp-rank" in s.reason for s in res.skipped)
+    assert all("mb=4" in p.label for p in res)
+
+
+def test_sweep_over_schedules_dedupes_pp1():
+    sc = Scenario(TINY).train(batch=16, seq=64)
+    base = sc.sweep(8, microbatches=4, schedule="1f1b")
+    multi = sc.sweep(8, microbatches=4,
+                     schedule=("1f1b", "gpipe", "zb-h1"), vstages=1)
+    n_pp1 = sum(1 for p in base if p.cfg.pp == 1)
+    n_pp = len(base) - n_pp1
+    # pp=1 points are schedule-independent and enumerated once
+    assert len(multi) == n_pp1 + 3 * n_pp
+    scheds = {p.cfg.schedule for p in multi if p.cfg.pp > 1}
+    assert scheds == {"1f1b", "gpipe", "zb-h1"}
+
+
+# ---- simulator semantics (pinned) ------------------------------------------
+
+def test_compute_comm_time_semantics():
+    """The optimizer runs once per step: per-step stream busy time is
+    microbatch busy x M + optimizer busy, NOT (microbatch + opt) x M —
+    the regression behind the old dead conditional
+    ``compute_busy * (mb if pp == 1 else mb)``."""
+    tr = Scenario(TINY).train(batch=8, seq=64).parallel(
+        dp=2, pp=2, microbatches=4).trace()
+    sim = tr.simulate(TPU_V5E)
+    mb = 4
+    assert sim.compute_time == max(
+        st.compute_busy * mb + st.opt_compute for st in sim.stages)
+    assert sim.comm_time == max(
+        st.comm_busy * mb + st.opt_comm for st in sim.stages)
+    assert sim.exposed_comm == max(
+        st.exposed_comm * mb + st.opt_exposed for st in sim.stages)
+    assert 0.0 <= sim.overlap_ratio <= 1.0
+    # opt busy must not scale with microbatch count
+    s1 = tr.simulate(TPU_V5E, microbatches=1)
+    s8 = tr.simulate(TPU_V5E, microbatches=8)
+    opt = max(st.opt_compute for st in s1.stages)
+    per_mb = max(st.compute_busy for st in s1.stages)
+    assert s8.compute_time == pytest.approx(per_mb * 8 + opt)
+
+
+def test_simulate_schedule_override():
+    tr = Scenario(TINY).train(batch=8, seq=64).parallel(
+        dp=2, pp=2, microbatches=4).trace()
+    default = tr.simulate(TPU_V5E)
+    assert default.schedule == "1f1b"
+    zb = tr.simulate(TPU_V5E, schedule="zb-h1")
+    assert zb.schedule == "zb-h1"
+    assert zb.bubble_fraction < default.bubble_fraction
+    assert zb.step_time < default.step_time
+
+
+def test_schedule_parallel_compose_in_either_order():
+    """.schedule() before .parallel() must survive the cfg rebuild."""
+    a = (Scenario(TINY).train(batch=8, seq=64)
+         .schedule("zb-h1").parallel(dp=2, pp=4, microbatches=8))
+    b = (Scenario(TINY).train(batch=8, seq=64)
+         .parallel(dp=2, pp=4, microbatches=8).schedule("zb-h1"))
+    assert a.cfg == b.cfg and a.cfg.schedule == "zb-h1"
+    c = (Scenario(TINY).train(batch=8, seq=64)
+         .schedule("interleaved", vstages=2)
+         .parallel(dp=2, pp=4, microbatches=8))
+    assert c.cfg.schedule == "interleaved" and c.cfg.vstages == 2
+    # an explicit parallel(schedule=...) still wins; the inherited
+    # chunking quietly resets for a schedule that cannot use it
+    d = c.parallel(dp=2, pp=4, microbatches=8, schedule="gpipe")
+    assert d.cfg.schedule == "gpipe" and d.cfg.vstages == 1
+    # ...but an EXPLICIT contradictory vstages surfaces the validation
+    with pytest.raises(ValueError, match="interleaved"):
+        Scenario(TINY).train(batch=8, seq=64).parallel(
+            pp=4, microbatches=8, vstages=2)        # forgot schedule=
+    with pytest.raises(ValueError, match="interleaved"):
+        Scenario(TINY).train(batch=8, seq=64).schedule("zb-h1", vstages=2)
+
+
+def test_simulate_override_must_match_pipeline_cut():
+    """An interleaved-cut workload bakes chunk assignment into its nodes;
+    replaying a different granularity over it would silently drop chunk
+    durations, so it raises instead."""
+    tr = (Scenario(TINY).train(batch=8, seq=64)
+          .parallel(dp=2, pp=2, microbatches=4)
+          .schedule("interleaved", vstages=2).trace())
+    with pytest.raises(ValueError, match="pipeline cut"):
+        tr.simulate(TPU_V5E, schedule="1f1b")
+    with pytest.raises(ValueError, match="pipeline cut"):
+        tr.simulate(TPU_V5E, vstages=1)
+    assert tr.simulate(TPU_V5E).step_time > 0      # matching replay fine
+
+
+def test_interleaved_plan_assigns_chunks():
+    tr = (Scenario(TINY).train(batch=8, seq=64)
+          .parallel(dp=2, pp=2, microbatches=4)
+          .schedule("interleaved", vstages=2)
+          .with_backend("sympy").trace())
+    plan = tr.plan
+    assert plan.vstages == 2 and plan.chunks == 4
+    chunks = set(plan.op_vstage.values())
+    assert chunks == {0, 1, 2, 3}
+    for uid, c in plan.op_vstage.items():
+        assert plan.op_stage[uid] == c % 2
+    # each physical stage hosts two non-adjacent chunks
+    assert tr.workload.vstages_of(0) == [0, 2]
+    assert tr.workload.vstages_of(1) == [1, 3]
+    # more chunk boundaries -> more P2P than the plain 2-stage cut
+    plain = (Scenario(TINY).train(batch=8, seq=64)
+             .parallel(dp=2, pp=2, microbatches=4)
+             .with_backend("sympy").trace())
+    assert len(plan.sendrecvs) > len(plain.plan.sendrecvs)
+
+
+def test_recompute_still_reduces_memory_and_slows_bwd():
+    tr = Scenario(TINY).train(batch=8, seq=64).parallel(
+        dp=2, pp=2, microbatches=4).trace()
+    plain = tr.simulate(TPU_V5E)
+    rec = tr.simulate(TPU_V5E, recompute=True)
+    assert rec.step_time > plain.step_time
+    assert all(r.t_bwd > p.t_bwd for r, p in zip(rec.stages, plain.stages))
+
+
+# ---- Chakra export: SendRecv ids + schedule expansion ----------------------
+
+def _trace(pp=2, mb=2, sched="1f1b", v=1):
+    return (Scenario(TINY).train(batch=8, seq=64)
+            .parallel(dp=2, pp=pp, microbatches=mb)
+            .schedule(sched, vstages=v).trace())
+
+
+def test_sendrecv_recv_ids_collision_free():
+    """The recv node id scheme (``-n.uid``) must never collide with any
+    other node id in the stage trace (op uids start at 1, so 0 is never
+    ambiguous)."""
+    tr = _trace()
+    for stage in (0, 1):
+        t = tr.chakra_stage(stage)
+        ids = [nd["id"] for nd in t["nodes"]]
+        assert len(ids) == len(set(ids))
+        recvs = [nd for nd in t["nodes"] if nd["type"] == "COMM_RECV_NODE"]
+        assert recvs, "pp=2 stage must receive cross-stage tensors"
+        for nd in recvs:
+            assert nd["id"] < 0 and -nd["id"] in set(ids)
+
+
+def test_export_ranks_roundtrip_pp2_cross_stage_deps(tmp_path):
+    tr = _trace()
+    n = tr.export_chakra(str(tmp_path))
+    assert n == tr.workload.cfg.world == 4
+    for rank in range(4):
+        got = json.load(open(tmp_path / f"rank{rank}.json"))
+        ids = {nd["id"] for nd in got["nodes"]}
+        for nd in got["nodes"]:
+            for d in nd["data_deps"]:
+                assert d in ids, (rank, nd["id"], d)
+        # every send is consumed by its recv twin inside the same rank
+        sends = {nd["id"] for nd in got["nodes"]
+                 if nd["type"] == "COMM_SEND_NODE"}
+        recv_deps = {d for nd in got["nodes"]
+                     if nd["type"] == "COMM_RECV_NODE"
+                     for d in nd["data_deps"]}
+        assert sends == recv_deps
+
+
+@pytest.mark.parametrize("sched", SCHEDULES)
+def test_expanded_export_replays_schedule(sched, tmp_path):
+    v = 2 if sched == "interleaved" else 1
+    tr = _trace(pp=2, mb=4, sched=sched, v=v)
+    for stage in (0, 1):
+        t = tr.chakra_stage(stage, expand_microbatches=True)
+        ids = [nd["id"] for nd in t["nodes"]]
+        assert len(ids) == len(set(ids)), "instance ids collide"
+        idset = set(ids)
+        for nd in t["nodes"]:
+            assert all(d in idset for d in nd["data_deps"])
+            assert all(d in idset for d in nd["ctrl_deps"])
+        # every microbatch instance present; opt stamped exactly once
+        base = tr.chakra_stage(stage)
+        n_mb = sum(1 for nd in base["nodes"] if nd["attrs"]["phase"] != "opt")
+        n_opt = len(base["nodes"]) - n_mb
+        assert len(t["nodes"]) == n_mb * 4 + n_opt
+        # control chain follows slot order: fwd of mb 0 precedes bwd of mb 0
+        first_of = {}
+        for i, nd in enumerate(t["nodes"]):
+            key = (nd["attrs"]["phase"], nd["attrs"].get("mb"))
+            first_of.setdefault(key, i)
+        assert first_of[("fwd", 0)] < first_of[("bwd", 0)]
+    # optimizer nodes depend on every microbatch's grad instance
+    t = tr.chakra_stage(1, expand_microbatches=True)
+    opt = [nd for nd in t["nodes"] if nd["attrs"]["phase"] == "opt"
+           and nd["data_deps"]]
+    assert opt
+    stride = max(abs(i) for i in (nd["id"] for nd in t["nodes"])) + 1
+    mbs_per_opt = max(len(nd["data_deps"]) for nd in opt)
+    assert mbs_per_opt >= 4
