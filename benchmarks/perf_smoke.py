@@ -10,6 +10,11 @@ runner of any speed catches >2x regressions in either fast path:
   ``schedule=("1f1b", "interleaved", "zb-h1")`` (interleaved with two
   virtual stages), sympy vs compiled — guards the schedule replay +
   per-chunk phase timing added with the schedule subsystem.
+* **topology sweep** — the hierarchical-fabric path: the same study on a
+  topology-enabled profile with the axis placement swept (tp-inner vs
+  dp-inner), sympy vs compiled — guards the shared CollectiveModel
+  lowering (one record per (coll, axis, group)) staying off the per-node
+  hot path.
 * **export** — per-rank Chakra stamping with the pre-serialized splice
   path vs the naive per-rank ``json.dump`` re-serialization it replaced.
 
@@ -23,6 +28,7 @@ import time
 
 from repro import Scenario
 from repro.core import ModelSpec
+from repro.core.topology import h100_hgx_pod
 from repro.core.chakra import export_stage, rank_coords
 
 SPEC = ModelSpec(name="perf-smoke", n_layers=4, d_model=256, n_heads=8,
@@ -33,7 +39,10 @@ WORLD = 16
 # (see BENCH_*.json) so only genuine >2x regressions trip them.
 MIN_SWEEP_RATIO = 3.0
 MIN_SCHED_RATIO = 2.0
+MIN_TOPO_RATIO = 2.0
 MIN_EXPORT_RATIO = 2.0
+
+POD = h100_hgx_pod(2, gpus_per_node=8)         # 16 devices = WORLD
 
 
 def _study(sc):
@@ -52,6 +61,15 @@ def _sched_study(sc):
     return len(sc.sweep(WORLD, microbatches=4,
                         schedule=("1f1b", "interleaved", "zb-h1"),
                         vstages=2))
+
+
+def _topo_study(sc):
+    """Topology-enabled sweep with the placement as a swept dimension:
+    every point costs its collectives tier-aware on a 2-node pod."""
+    res = sc.cluster(POD).sweep(
+        WORLD, placements=[("tp", "dp", "cp", "pp"),
+                           ("dp", "tp", "cp", "pp")])
+    return len(res)
 
 
 def _naive_export(w, out_dir, ranks):
@@ -100,6 +118,21 @@ def run(report):
         f"compiled schedule sweep only {sched_ratio:.1f}x vs sympy " \
         f"(floor {MIN_SCHED_RATIO}x) — schedule-path regression"
 
+    t0 = time.time()
+    nt_sym = _topo_study(sc.with_backend("sympy"))
+    tt_sym = time.time() - t0
+    t0 = time.time()
+    nt_cmp = _topo_study(sc)
+    tt_cmp = time.time() - t0
+    assert nt_sym == nt_cmp, (nt_sym, nt_cmp)
+    topo_ratio = tt_sym / tt_cmp
+    report("perf_smoke/topology_sweep", tt_cmp * 1e6,
+           f"{nt_cmp / tt_cmp:.0f} pts/s compiled vs {nt_sym / tt_sym:.0f} "
+           f"sympy = {topo_ratio:.1f}x")
+    assert topo_ratio >= MIN_TOPO_RATIO, \
+        f"compiled topology sweep only {topo_ratio:.1f}x vs sympy " \
+        f"(floor {MIN_TOPO_RATIO}x) — collective-model hot-path regression"
+
     tr = sc.parallel(dp=16, tp=8, sp=True, pp=2, microbatches=2).trace()
     w = tr.workload
     ranks = range(w.cfg.world)                     # 256 ranks
@@ -131,6 +164,12 @@ def run(report):
                            "compiled_pts_per_sec": round(ns_cmp / ts_cmp, 1),
                            "sympy_pts_per_sec": round(ns_sym / ts_sym, 1),
                            "speedup": round(sched_ratio, 2)},
+        "topology_sweep": {"points": nt_cmp,
+                           "compiled_s": round(tt_cmp, 3),
+                           "sympy_s": round(tt_sym, 3),
+                           "compiled_pts_per_sec": round(nt_cmp / tt_cmp, 1),
+                           "sympy_pts_per_sec": round(nt_sym / tt_sym, 1),
+                           "speedup": round(topo_ratio, 2)},
         "export": {"ranks": len(ranks),
                    "stamp_ranks_per_sec": round(len(ranks) / t_stamp, 1),
                    "naive_ranks_per_sec": round(len(ranks) / t_naive, 1),

@@ -18,13 +18,15 @@ pipeline), :mod:`repro.models` / :mod:`repro.launch` (the jax runtime).
 """
 from .api import (Scenario, Trace, clear_graph_cache, compiled_cache_stats,
                   graph_cache_stats)
-from .core import (H100_HGX, TPU_V5E, HardwareProfile, InfeasibleConfigError,
+from .core import (H100_HGX, H100_HGX_POD, TPU_V5E, TPU_V5E_POD,
+                   ClusterTopology, HardwareProfile, InfeasibleConfigError,
                    MLASpec, ModelSpec, MoESpec, ParallelCfg, SSMSpec,
-                   SweepResult)
+                   SweepResult, Tier)
 
 __all__ = [
     "Scenario", "Trace", "graph_cache_stats", "clear_graph_cache",
     "compiled_cache_stats", "ModelSpec", "MoESpec", "MLASpec", "SSMSpec",
     "ParallelCfg", "SweepResult", "InfeasibleConfigError",
-    "HardwareProfile", "TPU_V5E", "H100_HGX",
+    "HardwareProfile", "TPU_V5E", "H100_HGX", "TPU_V5E_POD", "H100_HGX_POD",
+    "ClusterTopology", "Tier",
 ]

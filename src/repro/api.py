@@ -57,6 +57,7 @@ from .core.memory import MemoryReport, peak_memory
 from .core.simulate import SimResult, simulate
 from .core.stg import Graph, GraphBuilder
 from .core.symbolic import Env
+from .core.topology import ClusterTopology, normalize_placement
 
 __all__ = ["Scenario", "Trace", "graph_cache_stats", "clear_graph_cache",
            "compiled_cache_stats"]
@@ -180,6 +181,9 @@ class Scenario:
     cfg: ParallelCfg = field(default_factory=ParallelCfg)
     name: Optional[str] = None
     backend: str = "compiled"               # compiled | sympy
+    topology: Optional[ClusterTopology] = None   # hierarchical fabric
+    algorithms: tuple = ()                  # ((coll, algo), ...) overrides
+    placement_order: tuple = ()             # raw .placement() request
 
     def __post_init__(self):
         if self.mode not in ("train", "prefill", "decode"):
@@ -255,7 +259,11 @@ class Scenario:
             # can't use it; an explicitly passed one goes through so
             # ParallelCfg can reject the contradictory combination
             vstages=vstages if (schedule == "interleaved" or explicit_vstages)
-            else 1)
+            else 1,
+            # an earlier .placement() re-projects onto the new mesh, so
+            # the two fluent calls compose in either order
+            placement=normalize_placement(self.placement_order, axes)
+            if self.placement_order else ())
         return replace(self, cfg=cfg)
 
     def schedule(self, name: str, *, vstages: Optional[int] = None) -> "Scenario":
@@ -270,6 +278,34 @@ class Scenario:
         cfg = replace(self.cfg, schedule=name,
                       vstages=1 if vstages is None else vstages)
         return replace(self, cfg=cfg)
+
+    def cluster(self, topology: ClusterTopology) -> "Scenario":
+        """Cost collectives on a hierarchical fabric
+        (:class:`~repro.core.topology.ClusterTopology`): every group is
+        charged the slowest tier it actually spans under the current
+        axis placement.  The scenario's topology is the more specific
+        description, so it overrides any topology carried by the profile
+        passed to :meth:`Trace.simulate` / :meth:`sweep`."""
+        return replace(self, topology=topology)
+
+    def placement(self, *order: str) -> "Scenario":
+        """Order the mesh axes on the physical rank grid, innermost
+        first (``.placement("tp", "dp", "pp")`` keeps tensor-parallel
+        groups inside a node).  Axes absent from the current mesh are
+        ignored, omitted ones appended (``"pp"`` outermost by default) —
+        so one call composes with any :meth:`parallel` choice (the raw
+        order is kept and re-projected when the mesh changes).  Changes
+        collective *time* on a topology-aware profile, never bytes."""
+        cfg = replace(self.cfg, placement=normalize_placement(
+            order, self.cfg.axes))
+        return replace(self, cfg=cfg, placement_order=tuple(order))
+
+    def with_algorithm(self, coll: str, algo: str) -> "Scenario":
+        """Force a collective algorithm (``.with_algorithm("AllReduce",
+        "tree")``) instead of the topology-driven automatic selection —
+        see :mod:`repro.core.collectives` for the catalogue."""
+        algos = tuple(kv for kv in self.algorithms if kv[0] != coll)
+        return replace(self, algorithms=algos + ((coll, algo),))
 
     def with_cfg(self, cfg: ParallelCfg) -> "Scenario":
         """Escape hatch: adopt a hand-built :class:`ParallelCfg`."""
@@ -299,6 +335,13 @@ class Scenario:
                 + (f" kv={self.kv_len}" if self.kv_len else "")
                 + f" [{self.cfg.describe()}]")
 
+    def _effective_hw(self, hw: HardwareProfile) -> HardwareProfile:
+        """Overlay the scenario's cluster topology onto the profile —
+        the scenario's (more specific) fabric wins over the profile's."""
+        if self.topology is not None and hw.topology is not self.topology:
+            return hw.with_topology(self.topology)
+        return hw
+
     # ---- pipeline -------------------------------------------------------
     def builder(self) -> GraphBuilder:
         """A private mutable clone of the cached pristine assembly."""
@@ -310,6 +353,7 @@ class Scenario:
     def sweep(self, world: int, hw: HardwareProfile = TPU_V5E, *,
               mem_limit_gb: Optional[float] = None, recompute: bool = False,
               workers: int = 0, executor: str = "thread",
+              algorithms: Optional[dict] = None,
               **enum_kw) -> SweepResult:
         """One-shot DSE over every strategy for ``world`` devices (Fig 8).
 
@@ -318,8 +362,11 @@ class Scenario:
         :func:`repro.core.dse.enumerate_configs`: ``max_tp``, ``max_pp``,
         ``max_cp``, ``with_fsdp``, ``ep``, ``microbatches``,
         ``schedule`` — a name or an iterable of names to make the
-        pipeline schedule a swept dimension — and ``vstages``), evaluates
-        every point, and returns a :class:`~repro.core.dse.SweepResult`
+        pipeline schedule a swept dimension — ``vstages``, and
+        ``placements`` — an iterable of axis orders making the physical
+        placement a swept dimension on topology-aware profiles),
+        evaluates every point, and returns a
+        :class:`~repro.core.dse.SweepResult`
         sorted by step time with infeasible factorizations recorded on
         ``.skipped``.  With the default ``backend="compiled"`` the points
         replay lambdified numeric cost programs from the shared
@@ -333,10 +380,20 @@ class Scenario:
         (configs are partitioned by structure key, so no class is
         compiled twice; falls back to serial where fork is unavailable)."""
         env = self.env()
+        hw = self._effective_hw(hw)
+        if self.placement_order and "placements" not in enum_kw:
+            # a .placement() on the scenario applies to every swept
+            # factorization (pass placements=... to sweep several)
+            enum_kw["placements"] = [self.placement_order]
+        # per-call overrides stack on the scenario's .with_algorithm()
+        # picks, mirroring Trace.simulate(algorithms=...)
+        algos = dict(self.algorithms)
+        algos.update(algorithms or {})
         if workers and workers > 1 and executor == "process":
             return self._sweep_processes(world, hw, env, workers,
                                          mem_limit_gb=mem_limit_gb,
-                                         recompute=recompute, **enum_kw)
+                                         recompute=recompute,
+                                         algorithms=algos or None, **enum_kw)
         src = _cache.builder(self.spec, self.mode)      # one assembly/mode
         engine = (_engines.engine(self.spec, self.mode, env)
                   if self.backend == "compiled" else None)
@@ -344,11 +401,12 @@ class Scenario:
                          n_layers=total_layers(self.spec),
                          mem_limit_gb=mem_limit_gb, recompute=recompute,
                          name=self.spec.name, backend=self.backend,
-                         engine=engine, workers=workers, **enum_kw)
+                         engine=engine, workers=workers,
+                         algorithms=algos or None, **enum_kw)
 
     def _sweep_processes(self, world: int, hw: HardwareProfile, env: Env,
                          workers: int, *, mem_limit_gb, recompute,
-                         **enum_kw) -> SweepResult:
+                         algorithms=None, **enum_kw) -> SweepResult:
         import multiprocessing
         import sys
         from concurrent.futures import ProcessPoolExecutor
@@ -369,7 +427,8 @@ class Scenario:
         except ValueError:
             return self.sweep(world, hw, mem_limit_gb=mem_limit_gb,
                               recompute=recompute, workers=workers,
-                              executor="thread", **enum_kw)
+                              executor="thread", algorithms=algorithms,
+                              **enum_kw)
         cfgs = list(enumerate_configs(world, **enum_kw))
         # partition by structure key: every class compiles in exactly one
         # worker (and fork inherits the warmed assembly cache for free)
@@ -385,7 +444,7 @@ class Scenario:
         with ProcessPoolExecutor(max_workers=len(chunks),
                                  mp_context=ctx) as pool:
             futs = [pool.submit(_sweep_chunk_worker, self, hw, c,
-                                mem_limit_gb, recompute)
+                                mem_limit_gb, recompute, algorithms)
                     for c in chunks]
             indexed = [r for f in futs for r in f.result()]
         indexed.sort(key=lambda r: r[0])         # enumeration order
@@ -396,7 +455,7 @@ class Scenario:
 
 
 def _sweep_chunk_worker(sc: "Scenario", hw: HardwareProfile, items: list,
-                        mem_limit_gb, recompute) -> list:
+                        mem_limit_gb, recompute, algorithms=None) -> list:
     """Process-pool body: evaluate ``[(enum index, cfg), ...]`` serially
     with this worker's own compiled engine; returns indexed results."""
     from .core.dse import evaluate_or_skip
@@ -410,7 +469,8 @@ def _sweep_chunk_worker(sc: "Scenario", hw: HardwareProfile, items: list,
                 name=sc.spec.name, engine=engine,
                 build=None if engine is not None else
                 (lambda: src.clone().graph),
-                recompute=recompute, mem_limit_gb=mem_limit_gb, reuse=True))
+                recompute=recompute, mem_limit_gb=mem_limit_gb, reuse=True,
+                algorithms=algorithms))
             for idx, cfg in items]
 
 
@@ -489,21 +549,31 @@ class Trace:
         # dataclasses.replace what-ifs) must not share a cache slot
         return (hw.name, hw.peak_flops, hw.hbm_bw, hw.link_bw,
                 tuple(sorted(hw.link_bw_axis.items())), hw.link_latency,
-                tuple(sorted(hw.efficiency.items())), hw.mem_capacity)
+                tuple(sorted(hw.efficiency.items())), hw.mem_capacity,
+                hw.topology)
 
     def simulate(self, hw: HardwareProfile = TPU_V5E, *,
                  recompute: bool = False,
                  microbatches: Optional[int] = None,
                  schedule: Optional[str] = None,
-                 vstages: Optional[int] = None) -> SimResult:
+                 vstages: Optional[int] = None,
+                 algorithms: Optional[dict] = None) -> SimResult:
         """Analytic step time; ``schedule``/``vstages``/``microbatches``
         override the config's pipeline schedule for what-if analysis
-        without re-instantiating the workload."""
-        key = (self._hw_key(hw), recompute, microbatches, schedule, vstages)
+        without re-instantiating the workload.  The scenario's cluster
+        topology (:meth:`Scenario.cluster`) and collective-algorithm
+        overrides apply; ``algorithms`` adds per-call overrides on
+        top."""
+        hw = self.scenario._effective_hw(hw)
+        algos = dict(self.scenario.algorithms)
+        algos.update(algorithms or {})
+        key = (self._hw_key(hw), recompute, microbatches, schedule, vstages,
+               tuple(sorted(algos.items())))
         if key not in self._sim:
             self._sim[key] = simulate(self.workload, hw, recompute=recompute,
                                       microbatches=microbatches,
-                                      schedule=schedule, vstages=vstages)
+                                      schedule=schedule, vstages=vstages,
+                                      algorithms=algos or None)
         return self._sim[key]
 
     def memory(self, *, stage: int = 0, recompute: bool = False,
@@ -541,25 +611,47 @@ class Trace:
         return self.workload.total_flops(stage)
 
     # ---- export ---------------------------------------------------------
+    def _comm_model(self, topology=None):
+        """Topology-aware collective model for Chakra stamping (None
+        when neither the export call nor the scenario supplies a cluster
+        topology — exports then carry no fabric attrs, matching the
+        historical output)."""
+        sc = self.scenario
+        topology = topology or sc.topology
+        if topology is None:
+            return None
+        from .core.collectives import CollectiveModel
+        return CollectiveModel(topology, cfg=sc.cfg,
+                               algorithms=dict(sc.algorithms) or None)
+
     def export_chakra(self, out_dir: str,
                       ranks: Optional[Iterable[int]] = None, *,
                       decompose_alltoall: bool = False,
-                      expand_microbatches: bool = False) -> int:
+                      expand_microbatches: bool = False,
+                      topology: Optional[ClusterTopology] = None) -> int:
         """Write per-rank Chakra-schema JSON traces; returns file count.
 
         ``expand_microbatches`` unrolls the configured pipeline schedule
         into per-microbatch node instances (slot order preserved via
-        control deps) so downstream feeders replay the schedule."""
+        control deps) so downstream feeders replay the schedule.  With a
+        cluster topology (from ``topology=``, or the scenario's
+        :meth:`Scenario.cluster`), comm nodes carry ``algorithm`` /
+        ``tier`` / ``pg_stride`` attrs describing the fabric span their
+        group crosses — pass ``topology=hw.topology`` to stamp with the
+        same fabric a topology-carrying profile simulated on."""
         return export_ranks(self.workload, out_dir, ranks,
                             decompose_alltoall=decompose_alltoall,
-                            expand_microbatches=expand_microbatches)
+                            expand_microbatches=expand_microbatches,
+                            comm_model=self._comm_model(topology))
 
     def chakra_stage(self, stage: int = 0, *,
                      decompose_alltoall: bool = False,
-                     expand_microbatches: bool = False) -> dict:
+                     expand_microbatches: bool = False,
+                     topology: Optional[ClusterTopology] = None) -> dict:
         return export_stage(self.workload, stage,
                             decompose_alltoall=decompose_alltoall,
-                            expand_microbatches=expand_microbatches)
+                            expand_microbatches=expand_microbatches,
+                            comm_model=self._comm_model(topology))
 
     # ---- one-line report (launch pre-flight) ----------------------------
     def summary(self, hw: HardwareProfile = TPU_V5E, *,

@@ -8,8 +8,10 @@ Pipeline (paper Fig 3):
 from .assemble import (MLASpec, ModelSpec, MoESpec, SSMSpec, bind_env,
                        build_graph, total_layers)
 from .chakra import export_ranks, export_stage
+from .collectives import ALGORITHMS, CollectiveModel, comm_model
 from .compiled import CompiledBackend, CostProgram
-from .costmodel import H100_HGX, TPU_V5E, HardwareProfile
+from .costmodel import (H100_HGX, H100_HGX_POD, TPU_V5E, TPU_V5E_POD,
+                        HardwareProfile)
 from .distribute import ParallelCfg, distribute
 from .dse import SweepResult
 from .graphdist import apply_pipeline
@@ -21,12 +23,16 @@ from .simulate import SimResult, simulate
 from .stg import Graph, GraphBuilder, add_optimizer, backward
 from .symbolic import Env, sym
 from .tensor import REPLICATED, STensor, ShardSpec
+from .topology import (ClusterTopology, Tier, flat, h100_hgx_pod,
+                       tpu_v5e_pod)
 
 __all__ = [
     "MLASpec", "ModelSpec", "MoESpec", "SSMSpec", "bind_env", "build_graph",
     "total_layers", "export_ranks", "export_stage", "CompiledBackend",
-    "CostProgram", "H100_HGX", "TPU_V5E",
-    "HardwareProfile", "ParallelCfg", "distribute", "SweepResult",
+    "CostProgram", "H100_HGX", "H100_HGX_POD", "TPU_V5E", "TPU_V5E_POD",
+    "HardwareProfile", "ClusterTopology", "Tier", "flat", "h100_hgx_pod",
+    "tpu_v5e_pod", "ALGORITHMS", "CollectiveModel", "comm_model",
+    "ParallelCfg", "distribute", "SweepResult",
     "apply_pipeline", "Workload", "instantiate", "CommStep",
     "InfeasibleConfigError", "match", "MemoryReport",
     "peak_memory", "SCHEDULES", "Schedule", "build_schedule",

@@ -28,8 +28,13 @@ import json
 import os
 from typing import Iterable, Optional
 
+from typing import TYPE_CHECKING
+
 from .instantiate import NodeRec, Workload
 from .schedules import BWD, BWD_IN, BWD_W, FWD, build_schedule
+
+if TYPE_CHECKING:                           # import-cycle-free type hints
+    from .collectives import CollectiveModel
 
 _COMM_TYPE = {
     "AllReduce": "ALL_REDUCE", "AllGather": "ALL_GATHER",
@@ -39,7 +44,8 @@ _COMM_TYPE = {
 }
 
 
-def node_to_chakra(n: NodeRec, *, decompose_alltoall: bool = False) -> list[dict]:
+def node_to_chakra(n: NodeRec, *, decompose_alltoall: bool = False,
+                   comm_model: "CollectiveModel | None" = None) -> list[dict]:
     base = {
         "id": n.uid,
         "name": n.name,
@@ -53,6 +59,11 @@ def node_to_chakra(n: NodeRec, *, decompose_alltoall: bool = False) -> list[dict
                  "attrs": {**base["attrs"], "num_ops": n.flops,
                            "tensor_size": n.out_bytes}}]
     coll = n.comm["coll"]
+    if comm_model is not None:
+        # fabric metadata for topology-aware feeders: selected algorithm,
+        # bottleneck tier, and the group's stride on the rank grid
+        base["attrs"].update(comm_model.describe(
+            coll, n.comm["axis"], n.comm["group"]))
     if coll == "SendRecv":
         size = n.comm["size"]
         return [
@@ -84,14 +95,17 @@ def node_to_chakra(n: NodeRec, *, decompose_alltoall: bool = False) -> list[dict
 
 
 def export_stage(w: Workload, stage: int, *, decompose_alltoall: bool = False,
-                 expand_microbatches: bool = False) -> dict:
+                 expand_microbatches: bool = False,
+                 comm_model: "CollectiveModel | None" = None) -> dict:
     if expand_microbatches:
         nodes = _expanded_nodes(w, stage,
-                                decompose_alltoall=decompose_alltoall)
+                                decompose_alltoall=decompose_alltoall,
+                                comm_model=comm_model)
     else:
         nodes = []
         for n in w.stage_nodes(stage):
-            nodes.extend(node_to_chakra(n, decompose_alltoall=decompose_alltoall))
+            nodes.extend(node_to_chakra(n, decompose_alltoall=decompose_alltoall,
+                                        comm_model=comm_model))
     # cross-stage producers are satisfied by the recv side of Send/Recv
     # pairs; drop dangling dep ids so each per-rank trace is self-contained
     ids = {nd["id"] for nd in nodes}
@@ -102,7 +116,8 @@ def export_stage(w: Workload, stage: int, *, decompose_alltoall: bool = False,
 
 
 def _expanded_nodes(w: Workload, stage: int, *,
-                    decompose_alltoall: bool) -> list[dict]:
+                    decompose_alltoall: bool,
+                    comm_model: "CollectiveModel | None" = None) -> list[dict]:
     """Per-microbatch node instances in the rank's schedule-slot order.
 
     Instance ids are ``uid + mb · stride`` (recv side ``-(uid + mb ·
@@ -139,7 +154,8 @@ def _expanded_nodes(w: Workload, stage: int, *,
             continue
         off = slot.mb * stride
         for n in recs:
-            for nd in node_to_chakra(n, decompose_alltoall=decompose_alltoall):
+            for nd in node_to_chakra(n, decompose_alltoall=decompose_alltoall,
+                                     comm_model=comm_model):
                 inst = dict(nd)
                 inst["id"] = nd["id"] + off if nd["id"] > 0 else nd["id"] - off
                 inst["data_deps"] = [d + off if d > 0 else d - off
@@ -149,7 +165,8 @@ def _expanded_nodes(w: Workload, stage: int, *,
                 out.append(inst)
         prev_tail = out[-1]["id"]
     for n in opt_nodes:
-        for nd in node_to_chakra(n, decompose_alltoall=decompose_alltoall):
+        for nd in node_to_chakra(n, decompose_alltoall=decompose_alltoall,
+                                 comm_model=comm_model):
             inst = dict(nd)
             deps: list[int] = []
             for d in nd["data_deps"]:
@@ -166,6 +183,12 @@ def _expanded_nodes(w: Workload, stage: int, *,
 def rank_coords(rank: int, cfg) -> dict:
     """Decompose a flat rank id into (pp stage, per-axis coordinates).
 
+    The decomposition follows ``cfg.placement`` when set (the axis
+    listed first varies fastest — it owns contiguous ranks on the
+    physical grid, matching how the topology model costs its
+    collectives); the default is mesh order with ``pp`` outermost,
+    exactly the historical layout.
+
     Validates that ``rank`` addresses a real device: it must lie in
     ``[0, cfg.world)`` and the residual pipeline coordinate must be a
     valid stage index (``< cfg.pp``) — malformed ids raise instead of
@@ -174,25 +197,29 @@ def rank_coords(rank: int, cfg) -> dict:
     if not 0 <= rank < world:
         raise ValueError(f"rank {rank} out of range for world size {world} "
                          f"(mesh {cfg.axes}, pp={cfg.pp})")
+    order = getattr(cfg, "placement", ()) or tuple(cfg.axes) + ("pp",)
+    sizes = {**cfg.axes, "pp": max(1, cfg.pp)}
     coords = {}
     r = rank
-    for name, size in cfg.axes.items():
-        coords[name] = r % size
-        r //= size
+    for name in order:                         # innermost first
+        coords[name] = r % sizes[name]
+        r //= sizes[name]
     # defensive: for a consistent cfg this cannot fire (world = pp *
-    # prod(axes), so in-range ranks always decompose to r < pp); it
-    # guards cfgs whose fields were mutated after construction
-    if r >= max(1, cfg.pp):
+    # prod(axes), so in-range ranks always decompose fully); it guards
+    # cfgs whose fields were mutated after construction — for any
+    # placement, not just the default pp-outermost order
+    if r:
         raise ValueError(
-            f"rank {rank} decomposes to pipeline coordinate {r} but the "
-            f"config has only pp={cfg.pp} stages (mesh {cfg.axes})")
-    coords["pp"] = r
+            f"rank {rank} does not decompose over placement {order} "
+            f"(mesh {cfg.axes}, pp={cfg.pp}) — cfg mutated after "
+            f"construction?")
     return coords
 
 
 def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = None,
                  *, decompose_alltoall: bool = False,
-                 expand_microbatches: bool = False) -> int:
+                 expand_microbatches: bool = False,
+                 comm_model: "CollectiveModel | None" = None) -> int:
     """Stamp per-rank Chakra JSON files (rank -> its stage's trace).
 
     Each stage's node array is serialized exactly ONCE; per rank only the
@@ -206,7 +233,8 @@ def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = Non
     stage_body = {
         s: json.dumps(export_stage(
             w, s, decompose_alltoall=decompose_alltoall,
-            expand_microbatches=expand_microbatches))[:-1]
+            expand_microbatches=expand_microbatches,
+            comm_model=comm_model))[:-1]
         for s in range(w.stages)}
     count = 0
     for rank in (ranks if ranks is not None else range(world)):

@@ -616,6 +616,12 @@ class CompiledBackend:
 
     @staticmethod
     def _structure_key(cfg: ParallelCfg) -> tuple:
+        # deliberately EXCLUDES cfg.placement and cfg.schedule: axis
+        # placement and pipeline schedule change collective *timing*
+        # (applied by simulate's shared CollectiveModel / schedule
+        # replay), never the distributed graph structure or any NodeRec
+        # byte volume — so every placement of a factorization replays
+        # the same lowered program
         return (tuple(sorted(cfg.axes)), cfg.dp_axis, cfg.tp_axis,
                 cfg.cp_axis, cfg.ep_axis, cfg.sp, cfg.fsdp, cfg.zero1)
 

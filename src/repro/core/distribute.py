@@ -51,6 +51,9 @@ class ParallelCfg:
     microbatches: int = 1              # pipeline microbatches per step
     schedule: str = "1f1b"             # pipeline schedule (see core.schedules)
     vstages: int = 1                   # virtual stages/chunks (interleaved)
+    placement: tuple = ()              # axis order on the rank grid,
+                                       # innermost first ("pp" included);
+                                       # () = mesh order, pp outermost
 
     def __post_init__(self):
         for ax in (self.dp_axis, self.tp_axis, self.cp_axis, self.ep_axis):
@@ -70,6 +73,22 @@ class ParallelCfg:
             raise ValueError(
                 f"vstages={self.vstages} requires schedule='interleaved' "
                 f"(got {self.schedule!r})")
+        if self.placement:
+            self.placement = tuple(self.placement)
+            names = set(self.axes) | {"pp"}
+            unknown = [a for a in self.placement if a not in names]
+            if unknown:
+                raise ValueError(
+                    f"placement axes {unknown} not in mesh {self.axes} + pp")
+            if len(set(self.placement)) != len(self.placement):
+                raise ValueError(f"placement {self.placement} repeats an axis")
+            missing = [a for a in self.axes if a not in self.placement]
+            if missing:
+                raise ValueError(
+                    f"placement {self.placement} must order every mesh axis "
+                    f"(missing {missing})")
+            if "pp" not in self.placement:
+                self.placement = self.placement + ("pp",)
 
     def validate_workload(self, batch: Optional[int] = None) -> None:
         """Feasibility checks that need the workload shape (called by DSE
@@ -122,6 +141,8 @@ class ParallelCfg:
             bits.append("FSDP")
         if self.zero1:
             bits.append("ZeRO1")
+        if self.placement and self.placement != tuple(self.axes) + ("pp",):
+            bits.append("place=" + ".".join(self.placement))
         return ",".join(bits) or "single"
 
 

@@ -47,6 +47,7 @@ from .matcher import InfeasibleConfigError
 from .memory import MemoryReport, peak_memory
 from .simulate import SimResult, simulate
 from .symbolic import Env, sym
+from .topology import normalize_placement
 
 
 @dataclass
@@ -104,15 +105,27 @@ def enumerate_configs(world: int, *, max_tp: int = 64, max_pp: int = 64,
                       max_cp: int = 64, with_fsdp: bool = True,
                       ep: Optional[int] = None,
                       microbatches: int = 1,
-                      schedule="1f1b", vstages: int = 1) -> Iterable[ParallelCfg]:
+                      schedule="1f1b", vstages: int = 1,
+                      placements: Optional[Iterable] = None
+                      ) -> Iterable[ParallelCfg]:
     """All (dp, tp, cp, pp) power-of-two factorizations of ``world``.
 
     ``schedule`` may be a single name or an iterable of names from
     :data:`repro.core.schedules.SCHEDULES` — the latter makes the
     pipeline schedule one more swept dimension (each factorization is
     enumerated once per schedule).  ``vstages`` applies to interleaved
-    points (other schedules have no chunking)."""
+    points (other schedules have no chunking).
+
+    ``placements`` makes the axis *placement* a swept dimension: each
+    entry is an axis order (innermost first, e.g. ``("tp", "dp", "pp")``)
+    projected onto every factorization via
+    :func:`repro.core.topology.normalize_placement`; orders that
+    coincide after projection (an axis absent from the factorization)
+    are deduplicated.  Placement changes collective *time* on a
+    topology-aware profile, never bytes."""
     scheds = (schedule,) if isinstance(schedule, str) else tuple(schedule)
+    place_opts = (None,) if placements is None else tuple(
+        tuple(p) for p in placements)
     for tp in _pow2_divisors(world):
         if tp > max_tp:
             continue
@@ -136,22 +149,36 @@ def enumerate_configs(world: int, *, max_tp: int = 64, max_pp: int = 64,
                         pass  # EP reuses the dp axis (tokens<->experts A2A)
                     # schedules only differentiate pipelined points
                     for sched in (scheds if pp > 1 else scheds[:1]):
-                        yield ParallelCfg(
-                            axes=axes,
-                            dp_axis="dp" if dp > 1 else None,
-                            tp_axis="tp" if tp > 1 else None,
-                            sp=tp > 1,
-                            cp_axis="cp" if cp > 1 else None,
-                            ep_axis="dp" if (ep and dp > 1) else None,
-                            fsdp=fsdp, pp=pp,
-                            microbatches=microbatches,
-                            schedule=sched,
-                            vstages=vstages if sched == "interleaved" else 1)
+                        seen_places = set()
+                        for place in place_opts:
+                            if place is not None:
+                                place = normalize_placement(place, axes)
+                                # degree-1 axes don't stride the grid:
+                                # orders differing only in where "pp"
+                                # sits are physically identical at pp=1
+                                key = tuple(a for a in place
+                                            if a != "pp" or pp > 1)
+                                if key in seen_places:
+                                    continue
+                                seen_places.add(key)
+                            yield ParallelCfg(
+                                axes=axes,
+                                dp_axis="dp" if dp > 1 else None,
+                                tp_axis="tp" if tp > 1 else None,
+                                sp=tp > 1,
+                                cp_axis="cp" if cp > 1 else None,
+                                ep_axis="dp" if (ep and dp > 1) else None,
+                                fsdp=fsdp, pp=pp,
+                                microbatches=microbatches,
+                                schedule=sched,
+                                vstages=vstages if sched == "interleaved" else 1,
+                                placement=place or ())
 
 
 def evaluate_point(build: Callable[[], tuple], cfg: ParallelCfg, env: Env,
                    hw: HardwareProfile = TPU_V5E, *, n_layers: int,
-                   recompute: bool = False, name: str = "dse") -> DSEPoint:
+                   recompute: bool = False, name: str = "dse",
+                   algorithms: Optional[dict] = None) -> DSEPoint:
     """Reference (sympy) backend: run the full STAGE pipeline for one
     config.  ``build`` must return a fresh (GraphBuilder-owned) Graph
     each call (graphs are mutated)."""
@@ -159,7 +186,7 @@ def evaluate_point(build: Callable[[], tuple], cfg: ParallelCfg, env: Env,
     distribute(graph, cfg, env)
     plan = apply_pipeline(graph, cfg.pp, n_layers, vstages=cfg.vstages)
     w = instantiate(graph, cfg, env, plan, name=f"{name}/{cfg.describe()}")
-    sim = simulate(w, hw, recompute=recompute)
+    sim = simulate(w, hw, recompute=recompute, algorithms=algorithms)
     mem = peak_memory(graph, cfg, env, plan, recompute=recompute)
     return DSEPoint(cfg=cfg, sim=sim, mem=mem, label=cfg.describe())
 
@@ -167,7 +194,8 @@ def evaluate_point(build: Callable[[], tuple], cfg: ParallelCfg, env: Env,
 def evaluate_point_compiled(engine: CompiledBackend, cfg: ParallelCfg,
                             hw: HardwareProfile = TPU_V5E, *,
                             recompute: bool = False, name: str = "dse",
-                            reuse: bool = False) -> DSEPoint:
+                            reuse: bool = False,
+                            algorithms: Optional[dict] = None) -> DSEPoint:
     """Compiled backend: numeric replay of the config's structure class.
 
     ``reuse=True`` recycles the program's scratch workload between
@@ -175,7 +203,7 @@ def evaluate_point_compiled(engine: CompiledBackend, cfg: ParallelCfg,
     sharing one engine stay isolated)."""
     prog = engine.program(cfg)
     w = prog.instantiate(cfg, name=f"{name}/{cfg.describe()}", reuse=reuse)
-    sim = simulate(w, hw, recompute=recompute)
+    sim = simulate(w, hw, recompute=recompute, algorithms=algorithms)
     mem = prog.peak_memory(cfg, recompute=recompute)
     return DSEPoint(cfg=cfg, sim=sim, mem=mem, label=cfg.describe())
 
@@ -186,7 +214,8 @@ def evaluate_or_skip(cfg: ParallelCfg, *, env: Env, hw: HardwareProfile,
                      build: Optional[Callable] = None,
                      recompute: bool = False,
                      mem_limit_gb: Optional[float] = None,
-                     reuse: bool = False):
+                     reuse: bool = False,
+                     algorithms: Optional[dict] = None):
     """One sweep point, shared by every execution mode (serial, thread
     chunks, process chunks): returns a :class:`DSEPoint` (OOM-labelled
     when over ``mem_limit_gb``) or a :class:`SkippedConfig` when the
@@ -202,10 +231,11 @@ def evaluate_or_skip(cfg: ParallelCfg, *, env: Env, hw: HardwareProfile,
         if engine is not None:
             pt = evaluate_point_compiled(engine, cfg, hw,
                                          recompute=recompute, name=name,
-                                         reuse=reuse)
+                                         reuse=reuse, algorithms=algorithms)
         else:
             pt = evaluate_point(build, cfg, env, hw, n_layers=n_layers,
-                                recompute=recompute, name=name)
+                                recompute=recompute, name=name,
+                                algorithms=algorithms)
     except InfeasibleConfigError as e:
         return SkippedConfig(cfg, f"{type(e).__name__}: {e}")
     if mem_limit_gb is not None and pt.peak_gb > mem_limit_gb:
@@ -219,6 +249,7 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
           recompute: bool = False, name: str = "dse",
           backend: str = "compiled", engine: Optional[CompiledBackend] = None,
           workers: int = 0, chunk_size: int = 16,
+          algorithms: Optional[dict] = None,
           **enum_kw) -> SweepResult:
     """Evaluate every enumerated strategy; see module docstring.
 
@@ -239,7 +270,8 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
         return evaluate_or_skip(
             cfg, env=env, hw=hw, n_layers=n_layers, name=name,
             engine=engine, build=None if backend == "compiled" else build,
-            recompute=recompute, mem_limit_gb=mem_limit_gb, reuse=serial)
+            recompute=recompute, mem_limit_gb=mem_limit_gb, reuse=serial,
+            algorithms=algorithms)
 
     if workers and workers > 1 and len(cfgs) > 1:
         chunks = [cfgs[i:i + chunk_size]

@@ -14,6 +14,15 @@ here operation-for-operation in the same float-arithmetic order so its
 numeric replay is bit-identical — if you change how a NodeRec field is
 computed, update the compiled kernels too (tests/test_backend_parity.py
 enforces the contract).
+
+``NodeRec.comm`` records BYTES only (``size`` per the NCCL/Kineto
+volume convention, ``wire`` per the ring algorithm terms) — never time.
+Durations are applied downstream by the shared
+:class:`~repro.core.collectives.CollectiveModel`, which maps each
+``(coll, axis, group)`` onto the fabric tier the group spans under the
+config's axis placement.  That split is what keeps Table VII volumes
+and both backends' parity invariant under cluster topology and
+placement changes (they re-time the same records).
 """
 from __future__ import annotations
 

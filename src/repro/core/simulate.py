@@ -29,7 +29,9 @@ Time-accounting semantics (pinned by tests/test_schedules.py):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
+from .collectives import CollectiveModel, comm_model
 from .costmodel import HardwareProfile
 from .instantiate import NodeRec, Workload
 from .schedules import BWD, BWD_IN, BWD_W, FWD, build_schedule, replay
@@ -68,25 +70,33 @@ class SimResult:
         return self.step_time * 1e3
 
 
-def _schedule(nodes: list[NodeRec], hw: HardwareProfile) -> tuple[float, float, float]:
+def _schedule(nodes: list[NodeRec], hw: HardwareProfile,
+              model: Optional[CollectiveModel] = None
+              ) -> tuple[float, float, float]:
     """List-schedule on {compute, comm} streams; returns
     (makespan, compute_busy, comm_busy).
 
     Hot loop: runs once per stage per sweep point, so the stream state
-    lives in locals and the roofline/ring cost models are inlined (the
-    compiled backend makes everything around this numeric — the
-    scheduler must keep up).  The inlined math MUST stay equivalent to
-    :func:`repro.core.costmodel.node_time` — tests/test_dse_sweep.py::
-    test_schedule_matches_costmodel pins the two together."""
+    lives in locals and the roofline model is inlined; collectives go
+    through the shared :class:`~repro.core.collectives.CollectiveModel`
+    (one lowered record per ``(coll, axis, group)``, so the per-node
+    cost is a dict hit + multiply-add).  The costs MUST stay equivalent
+    to :func:`repro.core.costmodel.node_time` under the same model —
+    tests/test_dse_sweep.py::test_schedule_matches_costmodel pins the
+    two together.  NB: ``node_time``'s model-less default cannot see the
+    config's placement (it assumes innermost-contiguous groups), so on a
+    topology profile with a non-default placement pass
+    ``comm_model(hw, cfg)`` explicitly to match what ``simulate``
+    charges; on flat profiles the default is exactly equivalent."""
+    if model is None:
+        model = comm_model(hw)
+    time_of = model.time_of
     finish: dict[int, float] = {}
     fget = finish.get
     free_comp = free_comm = busy_comp = busy_comm = 0.0
     peak = hw.peak_flops
     hbm = hw.hbm_bw
     eff = hw.efficiency
-    lat = hw.link_latency
-    axis_bw = hw.link_bw_axis
-    link_bw = hw.link_bw
     for n in nodes:                                  # already topologically ordered
         comm = n.comm
         ready = 0.0
@@ -95,13 +105,7 @@ def _schedule(nodes: list[NodeRec], hw: HardwareProfile) -> tuple[float, float, 
             if t > ready:
                 ready = t
         if comm is not None:
-            g = int(comm["group"])
-            if g <= 1:
-                dur = 0.0
-            else:
-                bw = axis_bw.get(comm["axis"], link_bw)
-                steps = (g - 1) if comm["coll"] != "AllReduce" else 2 * (g - 1)
-                dur = comm["wire"] / bw + steps * lat
+            dur = time_of(comm)
             start = ready if ready > free_comm else free_comm
             end = start + dur
             free_comm = end
@@ -120,9 +124,10 @@ def _schedule(nodes: list[NodeRec], hw: HardwareProfile) -> tuple[float, float, 
     return makespan, busy_comp, busy_comm
 
 
-def _span3(nodes: list[NodeRec], hw: HardwareProfile) -> tuple[float, float, float, float]:
+def _span3(nodes: list[NodeRec], hw: HardwareProfile,
+           model: CollectiveModel) -> tuple[float, float, float, float]:
     """(span, compute busy, comm busy, exposed comm) for one slot body."""
-    span, cbusy, mbusy = _schedule(nodes, hw)
+    span, cbusy, mbusy = _schedule(nodes, hw, model)
     return span, cbusy, mbusy, max(0.0, span - cbusy)
 
 
@@ -130,15 +135,26 @@ def simulate(w: Workload, hw: HardwareProfile, *,
              microbatches: int | None = None,
              recompute: bool = False,
              schedule: str | None = None,
-             vstages: int | None = None) -> SimResult:
+             vstages: int | None = None,
+             algorithms: dict | None = None,
+             model: CollectiveModel | None = None) -> SimResult:
     """Analytic step time under ``w.cfg``'s pipeline schedule.
 
     ``schedule``/``vstages``/``microbatches`` override the config's
     values (what-if analysis without re-instantiating the workload).
     Overrides must match the chunk assignment baked into the workload by
     the pipeline cut: an interleaved-cut workload (``cfg.vstages > 1``)
-    can only replay interleaved at the same ``vstages``."""
+    can only replay interleaved at the same ``vstages``.
+
+    Collectives are costed by the shared
+    :class:`~repro.core.collectives.CollectiveModel` built from ``hw``
+    (+ ``w.cfg``'s axis placement when the profile has a topology);
+    ``algorithms`` forces per-collective algorithm choices
+    (``{"AllReduce": "tree"}``) and ``model`` supplies a pre-built model
+    outright."""
     cfg = w.cfg
+    if model is None:
+        model = comm_model(hw, cfg, algorithms)
     mb = microbatches if microbatches is not None else cfg.microbatches
     pp = max(1, cfg.pp)
     sched_name = schedule or getattr(cfg, "schedule", "1f1b")
@@ -146,7 +162,7 @@ def simulate(w: Workload, hw: HardwareProfile, *,
     v = vstages if vstages is not None else wl_v
 
     if pp <= 1:
-        return _simulate_single(w, hw, mb, recompute, sched_name)
+        return _simulate_single(w, hw, mb, recompute, sched_name, model)
     if v != wl_v or (sched_name != "interleaved" and wl_v > 1):
         raise ValueError(
             f"schedule override {sched_name!r}/vstages={v} does not match "
@@ -174,7 +190,7 @@ def simulate(w: Workload, hw: HardwareProfile, *,
         for c in sorted(set(fwd_c) | set(bwd_c)):
             fwd = fwd_c.get(c, [])
             bwd = bwd_c.get(c, [])
-            f_span, f_cb, f_mb, f_exp = _span3(fwd, hw)
+            f_span, f_cb, f_mb, f_exp = _span3(fwd, hw, model)
             dur[(FWD, c)] = f_span
             if recompute:
                 # activation recompute re-runs the forward during backward
@@ -182,21 +198,21 @@ def simulate(w: Workload, hw: HardwareProfile, *,
             if split_bwd:
                 b_in = [n for n in bwd if not n.wgrad]
                 b_w = [n for n in bwd if n.wgrad]
-                bi_span, bi_cb, bi_mb, bi_exp = _span3(b_in, hw)
-                bw_span, bw_cb, bw_mb, bw_exp = _span3(b_w, hw)
+                bi_span, bi_cb, bi_mb, bi_exp = _span3(b_in, hw, model)
+                bw_span, bw_cb, bw_mb, bw_exp = _span3(b_w, hw, model)
                 dur[(BWD_IN, c)] = bi_span
                 dur[(BWD_W, c)] = bw_span
                 b_span = bi_span + bw_span
                 b_cb, b_mb, b_exp = bi_cb + bw_cb, bi_mb + bw_mb, bi_exp + bw_exp
             else:
-                b_span, b_cb, b_mb, b_exp = _span3(bwd, hw)
+                b_span, b_cb, b_mb, b_exp = _span3(bwd, hw, model)
                 dur[(BWD, c)] = b_span
             t_fwd += f_span
             t_bwd += b_span
             cbusy += f_cb + b_cb
             mbusy += f_mb + b_mb
             exposed += f_exp + b_exp
-        opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw)
+        opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw, model)
         stage_sims.append(StageSim(
             t_fwd=t_fwd, t_bwd=t_bwd, t_opt=opt_span,
             compute_busy=cbusy, comm_busy=mbusy, exposed_comm=exposed,
@@ -210,7 +226,8 @@ def simulate(w: Workload, hw: HardwareProfile, *,
 
 
 def _simulate_single(w: Workload, hw: HardwareProfile, mb: int,
-                     recompute: bool, sched_name: str) -> SimResult:
+                     recompute: bool, sched_name: str,
+                     model: CollectiveModel) -> SimResult:
     """pp == 1: no pipeline — one combined fwd+bwd span per microbatch
     (kept on the exact pre-schedule-refactor arithmetic: the bulk of any
     DSE sweep is pp == 1 points and this is their hot path)."""
@@ -220,8 +237,8 @@ def _simulate_single(w: Workload, hw: HardwareProfile, mb: int,
         extra = [n for n in nodes if n.phase == "fwd" and n.comm is None]
         mb_nodes = mb_nodes + extra
     opt_nodes = [n for n in nodes if n.phase == "opt"]
-    span, cbusy, mbusy = _schedule(mb_nodes, hw)
-    opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw)
+    span, cbusy, mbusy = _schedule(mb_nodes, hw, model)
+    opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw, model)
     st = StageSim(
         t_fwd=span, t_bwd=0.0, t_opt=opt_span,
         compute_busy=cbusy, comm_busy=mbusy,

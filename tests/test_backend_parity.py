@@ -193,3 +193,59 @@ def test_compiled_structure_classes_are_reused():
     after = compiled_cache_stats()
     assert after["compiles"] == before["compiles"]
     assert after["hits"] > before["hits"]
+
+
+# ---- topology-aware comm model: parity must survive placement/tiering ------
+
+PLACEMENTS = (None, ("tp", "dp", "pp"), ("dp", "tp", "pp"),
+              ("pp", "tp", "dp"), ("dp", "pp", "tp"))
+
+
+@pytest.mark.parametrize("place", PLACEMENTS)
+def test_backend_parity_topology_placements(place):
+    """Hierarchical topologies + every axis placement: the collective
+    model is shared simulate-side post-processing over bit-identical
+    NodeRecs, so compiled vs sympy equality stays exact (==)."""
+    from repro import H100_HGX_POD
+    spec = get("qwen3-14b").smoke
+    sc = _scenario(spec, "train")
+    if place:
+        sc = sc.placement(*place)
+    ref = sc.with_backend("sympy").trace()
+    cmp_ = sc.trace()
+    s_ref = ref.simulate(H100_HGX_POD)
+    s_cmp = cmp_.simulate(H100_HGX_POD)
+    assert s_ref.step_time == s_cmp.step_time
+    assert s_ref.compute_time == s_cmp.compute_time
+    assert s_ref.comm_time == s_cmp.comm_time
+    assert s_ref.exposed_comm == s_cmp.exposed_comm
+    assert s_ref.bubble_fraction == s_cmp.bubble_fraction
+
+
+@pytest.mark.parametrize("algo", ["ring", "hier_ring", "halving_doubling",
+                                  "tree"])
+def test_backend_parity_algorithm_overrides(algo):
+    from repro import H100_HGX_POD
+    spec = get("minitron-8b").smoke
+    sc = _scenario(spec, "train").placement("tp", "dp", "pp") \
+        .with_algorithm("AllReduce", algo)
+    s_ref = sc.with_backend("sympy").trace().simulate(H100_HGX_POD)
+    s_cmp = sc.trace().simulate(H100_HGX_POD)
+    assert s_ref.step_time == s_cmp.step_time
+    assert s_ref.exposed_comm == s_cmp.exposed_comm
+
+
+def test_comm_volumes_invariant_under_topology_and_placement():
+    """Topology/placement change collective *time*, never bytes: the
+    Table VII volumes and per-node comm records are identical with and
+    without a cluster (table7_commvol.py output is pinned by this)."""
+    from repro.core.topology import h100_hgx_pod
+    spec = get("qwen3-14b").smoke
+    base = _scenario(spec, "train")
+    placed = base.cluster(h100_hgx_pod(4)).placement("tp", "dp", "pp")
+    wb, wp = base.trace().workload, placed.trace().workload
+    for stage in range(wb.stages):
+        assert wb.comm_volume(stage) == wp.comm_volume(stage)
+        assert wb.comm_counts(stage) == wp.comm_counts(stage)
+    for a, b in zip(wb.nodes, wp.nodes):
+        assert a.comm == b.comm, a.name
