@@ -17,6 +17,11 @@ runner of any speed catches >2x regressions in either fast path:
   hot path.
 * **export** — per-rank Chakra stamping with the pre-serialized splice
   path vs the naive per-rank ``json.dump`` re-serialization it replaced.
+* **generation** — the phase-program path: a 512-token batched
+  generation evaluated in closed form (one decode lowering + O(1)
+  samples) vs naive per-step evaluation (one full engine evaluation per
+  decode index, timed on a subset and scaled linearly — per-step cost
+  is index-independent, so the extrapolation is exact in expectation).
 
 Returns the measured points/sec / ranks/sec so ``run.py --record`` can
 file them into a ``BENCH_<n>.json`` perf record.
@@ -41,6 +46,9 @@ MIN_SWEEP_RATIO = 3.0
 MIN_SCHED_RATIO = 2.0
 MIN_TOPO_RATIO = 2.0
 MIN_EXPORT_RATIO = 2.0
+MIN_GEN_RATIO = 10.0         # ISSUE 5 acceptance: closed-form decode
+OUT_TOKENS = 512             # >= 10x naive per-step at 512 output tokens
+NAIVE_STEPS = 12             # naive subset actually timed (then scaled)
 
 POD = h100_hgx_pod(2, gpus_per_node=8)         # 16 devices = WORLD
 
@@ -133,6 +141,37 @@ def run(report):
         f"compiled topology sweep only {topo_ratio:.1f}x vs sympy " \
         f"(floor {MIN_TOPO_RATIO}x) — collective-model hot-path regression"
 
+    # ---- closed-form generation vs naive per-step decode ------------------
+    from repro import TPU_V5E, clear_graph_cache
+
+    gen_sc = Scenario(SPEC).prefill(batch=16, seq=128).parallel(dp=2, tp=2)
+    dec_sc = gen_sc.decode(batch=16, kv_len=128)
+    job = gen_sc.generation(out_tokens=OUT_TOKENS)
+
+    # naive: one full engine evaluation per decode index (every index
+    # binds a different Skv, so the engine cache misses every time);
+    # timed on NAIVE_STEPS indices and scaled — per-step cost does not
+    # depend on the index value
+    t0 = time.time()
+    for t in range(NAIVE_STEPS):
+        dec_sc.decode(batch=16, kv_len=128 + t).trace().simulate(TPU_V5E)
+    t_gen_naive = (time.time() - t0) * (OUT_TOKENS - 1) / NAIVE_STEPS
+
+    clear_graph_cache()                            # cold closed-form path
+    gen_sc.builder()                               # prefill assembly warm
+    t0 = time.time()
+    res = job.evaluate(TPU_V5E)
+    t_gen_closed = time.time() - t0
+    gen_ratio = t_gen_naive / t_gen_closed
+    report("perf_smoke/generation", t_gen_closed * 1e6,
+           f"{OUT_TOKENS}tok closed-form {t_gen_closed * 1e3:.0f}ms "
+           f"({res.engine_evals['samples']} samples) vs naive "
+           f"{t_gen_naive * 1e3:.0f}ms = {gen_ratio:.1f}x")
+    assert gen_ratio >= MIN_GEN_RATIO, \
+        f"closed-form generation only {gen_ratio:.1f}x vs naive per-step " \
+        f"(floor {MIN_GEN_RATIO}x) — decode-series regression"
+    assert res.engine_evals["samples"] <= 16, res.engine_evals
+
     tr = sc.parallel(dp=16, tp=8, sp=True, pp=2, microbatches=2).trace()
     w = tr.workload
     ranks = range(w.cfg.world)                     # 256 ranks
@@ -174,4 +213,9 @@ def run(report):
                    "stamp_ranks_per_sec": round(len(ranks) / t_stamp, 1),
                    "naive_ranks_per_sec": round(len(ranks) / t_naive, 1),
                    "speedup": round(export_ratio, 2)},
+        "generation": {"out_tokens": OUT_TOKENS,
+                       "closed_s": round(t_gen_closed, 3),
+                       "naive_s": round(t_gen_naive, 3),
+                       "samples": res.engine_evals["samples"],
+                       "speedup": round(gen_ratio, 2)},
     }

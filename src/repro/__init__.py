@@ -16,15 +16,17 @@ Lower-level pieces stay importable from :mod:`repro.core` (the symbolic
 pipeline), :mod:`repro.models` / :mod:`repro.launch` (the jax runtime).
 ``repro.core.generate()`` is deprecated in favor of ``Scenario``.
 """
-from .api import (Scenario, Trace, clear_graph_cache, compiled_cache_stats,
-                  graph_cache_stats)
+from .api import (Job, Phase, Scenario, Trace, clear_graph_cache,
+                  compiled_cache_stats, graph_cache_stats)
 from .core import (H100_HGX, H100_HGX_POD, TPU_V5E, TPU_V5E_POD,
                    ClusterTopology, HardwareProfile, InfeasibleConfigError,
                    MLASpec, ModelSpec, MoESpec, ParallelCfg, SSMSpec,
                    SweepResult, Tier)
+from .core.serving import DecodeSeries, JobResult, PhaseResult
 
 __all__ = [
-    "Scenario", "Trace", "graph_cache_stats", "clear_graph_cache",
+    "Scenario", "Trace", "Phase", "Job", "JobResult", "PhaseResult",
+    "DecodeSeries", "graph_cache_stats", "clear_graph_cache",
     "compiled_cache_stats", "ModelSpec", "MoESpec", "MLASpec", "SSMSpec",
     "ParallelCfg", "SweepResult", "InfeasibleConfigError",
     "HardwareProfile", "TPU_V5E", "H100_HGX", "TPU_V5E_POD", "H100_HGX_POD",

@@ -55,12 +55,14 @@ from .core.graphdist import PipelinePlan, apply_pipeline
 from .core.instantiate import Workload, instantiate
 from .core.memory import MemoryReport, peak_memory
 from .core.simulate import SimResult, simulate
+from .core.matcher import InfeasibleConfigError
+from .core.serving import DecodeSeries, JobResult, PhaseResult
 from .core.stg import Graph, GraphBuilder
 from .core.symbolic import Env
 from .core.topology import ClusterTopology, normalize_placement
 
-__all__ = ["Scenario", "Trace", "graph_cache_stats", "clear_graph_cache",
-           "compiled_cache_stats"]
+__all__ = ["Scenario", "Trace", "Phase", "Job", "graph_cache_stats",
+           "clear_graph_cache", "compiled_cache_stats"]
 
 
 # --------------------------------------------------------------------------
@@ -141,6 +143,52 @@ class _EngineCache:
 _engines = _EngineCache()
 
 
+def _cfg_key(cfg: ParallelCfg) -> tuple:
+    """Hashable identity of a full parallel config (series cache key)."""
+    return (tuple(sorted(cfg.axes.items())), cfg.dp_axis, cfg.tp_axis,
+            cfg.cp_axis, cfg.ep_axis, cfg.sp, cfg.fsdp, cfg.zero1,
+            cfg.pp, cfg.microbatches, cfg.schedule, cfg.vstages,
+            cfg.placement)
+
+
+class _SeriesCache:
+    """Process-wide :class:`~repro.core.serving.DecodeSeries` cache.
+
+    Keyed by ``(spec, batch, kv0, cfg)`` — the lowered decode structure
+    and its coefficient polynomials are step-count independent, so one
+    series serves every ``out_tokens`` value up to its size (a request
+    for a longer range rebuilds and replaces the entry)."""
+
+    def __init__(self, maxsize: int = 16):
+        self.maxsize = maxsize
+        self._store: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+
+    def series(self, sc: "Scenario", steps: int) -> DecodeSeries:
+        key = (sc.spec, sc.batch, sc.kv_len, _cfg_key(sc.cfg))
+        with self._lock:
+            hit = self._store.get(key)
+            if hit is not None and hit.steps >= steps:
+                self._store.move_to_end(key)
+                return hit
+        series = DecodeSeries(
+            lambda: _cache.builder(sc.spec, "decode").clone().graph,
+            sc.spec, sc.cfg, batch=sc.batch, kv0=sc.kv_len, steps=steps,
+            name=f"{sc.spec.name}/decode")
+        with self._lock:
+            self._store[key] = series
+            while len(self._store) > self.maxsize:
+                self._store.popitem(last=False)
+        return series
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+
+
+_series = _SeriesCache()
+
+
 def graph_cache_stats() -> dict:
     """{'size', 'builds', 'hits'} of the process-wide (spec, mode) cache."""
     return {"size": len(_cache._store), "builds": _cache.builds,
@@ -162,6 +210,7 @@ def compiled_cache_stats() -> dict:
 def clear_graph_cache() -> None:
     _cache.clear()
     _engines.clear()
+    _series.clear()
 
 
 # --------------------------------------------------------------------------
@@ -199,8 +248,16 @@ class Scenario:
     def serve(self, *, batch: int, seq: int = 1,
               kv_len: Optional[int] = None) -> "Scenario":
         """Inference: ``seq == 1`` is a decode step against a ``kv_len``
-        cache; ``seq > 1`` is prefill (kv_len defaults to seq)."""
+        cache (kv_len REQUIRED — a decode step without a cache length is
+        meaningless, and the historical ``kv = seq`` fallback silently
+        modeled a 1-token cache); ``seq > 1`` is prefill (kv_len
+        defaults to seq)."""
         mode = "decode" if seq == 1 else "prefill"
+        if mode == "decode" and kv_len is None:
+            raise ValueError(
+                "serve(batch=..., seq=1) is a decode step and requires "
+                "kv_len=<context length>; use .prefill(batch=..., seq=...) "
+                "for the prompt phase or .decode(batch=..., kv_len=...)")
         return replace(self, mode=mode, batch=batch, seq=seq, kv_len=kv_len)
 
     def prefill(self, *, batch: int, seq: int) -> "Scenario":
@@ -321,6 +378,46 @@ class Scenario:
         produce identical workloads (tests/test_backend_parity.py)."""
         return replace(self, backend=backend)
 
+    # ---- phase programs -------------------------------------------------
+    def phase(self, *, steps: int = 1, kv_growth: int = 0,
+              pool: str = "default", name: str = "") -> "Phase":
+        """Wrap this scenario as one :class:`Phase` of a phase program
+        (``steps`` repetitions; ``kv_growth=1`` advances the KV length
+        per step — decode mode only)."""
+        return Phase(scenario=self, steps=steps, kv_growth=kv_growth,
+                     pool=pool, name=name)
+
+    def generation(self, *, out_tokens: int, batch: Optional[int] = None,
+                   seq: Optional[int] = None) -> "Job":
+        """A whole generation request as a phase program: prefill the
+        ``[batch, seq]`` prompt (emits the first token), then
+        ``out_tokens - 1`` decode steps against a KV cache growing from
+        ``seq`` — the fluent entry point to the :class:`Job` API; the
+        existing one-phase ``.prefill()``/``.decode()`` scenarios are the
+        degenerate case.  The prompt shape defaults to the scenario's
+        current serving shape (``.prefill(batch=8, seq=1024)
+        .generation(out_tokens=512)``); parallelization, topology and
+        collective overrides carry over to both phases (colocated —
+        see :meth:`Job.disaggregate` for split pools)."""
+        if out_tokens < 1:
+            raise ValueError(f"out_tokens must be >= 1, got {out_tokens}")
+        b = batch if batch is not None else self.batch
+        s = seq if seq is not None else (
+            self.kv_len if self.mode == "decode" else self.seq)
+        if self.mode == "train" and (batch is None or seq is None):
+            raise ValueError(
+                "generation() needs a serving prompt shape — call "
+                ".prefill(batch=..., seq=...) first or pass batch=/seq=")
+        if s is None or s < 1:
+            raise ValueError(f"prompt length must be >= 1, got {s}")
+        phases = [Phase(self.prefill(batch=b, seq=s), steps=1,
+                        name="prefill")]
+        if out_tokens > 1:
+            phases.append(Phase(self.decode(batch=b, kv_len=s),
+                                steps=out_tokens - 1, kv_growth=1,
+                                name="decode"))
+        return Job(phases=tuple(phases), name=self.name or self.spec.name)
+
     # ---- derived --------------------------------------------------------
     @property
     def world(self) -> int:
@@ -328,7 +425,7 @@ class Scenario:
 
     def env(self) -> Env:
         return bind_env(self.spec, batch=self.batch, seq=self.seq,
-                        kv_len=self.kv_len)
+                        kv_len=self.kv_len, mode=self.mode)
 
     def describe(self) -> str:
         return (f"{self.spec.name}/{self.mode} b={self.batch} s={self.seq}"
@@ -668,3 +765,416 @@ class Trace:
     def __repr__(self) -> str:
         state = "materialized" if self._workload is not None else "lazy"
         return f"Trace({self.scenario.describe()}, {state})"
+
+
+# --------------------------------------------------------------------------
+# Phase programs: Phase / Job
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Phase:
+    """One Scenario-like unit of a phase program: a workload shape +
+    parallelization executed ``steps`` times on a named ``pool``.
+    ``kv_growth=1`` advances the KV length by one entry per step (decode
+    against a growing cache) — those phases are evaluated in closed form
+    by :class:`~repro.core.serving.DecodeSeries`, not step-by-step."""
+    scenario: Scenario
+    steps: int = 1
+    kv_growth: int = 0
+    pool: str = "default"
+    name: str = ""
+
+    def __post_init__(self):
+        if self.steps < 1:
+            raise ValueError(f"steps must be >= 1, got {self.steps}")
+        if self.kv_growth not in (0, 1):
+            raise ValueError("kv_growth must be 0 (static shape) or 1 "
+                             "(one KV entry per decoded token)")
+        if self.kv_growth and self.scenario.mode != "decode":
+            raise ValueError("kv_growth requires a decode-mode scenario")
+        if self.kv_growth and self.scenario.kv_len is None:
+            raise ValueError("kv_growth phase needs the starting KV length "
+                             "(Scenario.decode(batch=..., kv_len=...))")
+
+
+def _as_cfg(pool, template: Scenario) -> ParallelCfg:
+    """Coerce a pool description (ParallelCfg | Scenario | .parallel()
+    kwargs dict) onto a phase's scenario."""
+    if isinstance(pool, ParallelCfg):
+        return pool
+    if isinstance(pool, Scenario):
+        return pool.cfg
+    if isinstance(pool, dict):
+        return template.parallel(**pool).cfg
+    raise TypeError(f"pool must be ParallelCfg, Scenario or dict of "
+                    f".parallel() kwargs, got {type(pool).__name__}")
+
+
+@dataclass(frozen=True)
+class Job:
+    """A phase program: phases composed sequentially onto named pools.
+
+    Build one with :meth:`Scenario.generation` (prefill + growing-KV
+    decode), :meth:`Job.request`, or directly from :class:`Phase` units;
+    :meth:`disaggregate` moves prefill and decode onto separate pools
+    with an explicit KV-cache handoff.  :meth:`evaluate` returns
+    end-to-end serving metrics (TTFT / TPOT / tokens/s / peak KV) with
+    O(1) engine evaluations per decode phase regardless of step count;
+    :meth:`sweep` makes ``out_tokens`` and the pool split DSE
+    dimensions; :meth:`export_chakra` stamps the whole timeline as one
+    coherent per-rank trace set."""
+    phases: tuple = ()
+    kv_transfer_bw: Optional[float] = None   # bytes/s; None -> hw.link_bw
+    disaggregated: bool = False
+    name: str = ""
+
+    def __post_init__(self):
+        if not self.phases:
+            raise ValueError("a Job needs at least one Phase")
+
+    # ---- construction ---------------------------------------------------
+    @staticmethod
+    def request(*, prefill, decode_steps: int, decode=None) -> "Job":
+        """A single batched request: one prefill phase, then
+        ``decode_steps`` growing-KV decode steps.  ``prefill`` is a
+        prefill-mode :class:`Scenario` (or a :class:`Phase` wrapping
+        one); ``decode`` defaults to the same model/parallelization
+        decoding against the prompt-length cache."""
+        pre = prefill if isinstance(prefill, Phase) \
+            else Phase(prefill, steps=1, name="prefill")
+        if pre.scenario.mode != "prefill":
+            raise ValueError(f"prefill phase must be prefill-mode, got "
+                             f"{pre.scenario.mode!r}")
+        phases = [pre]
+        if decode_steps:
+            sc = decode if decode is not None else \
+                pre.scenario.decode(batch=pre.scenario.batch,
+                                    kv_len=pre.scenario.seq)
+            if sc.mode != "decode":
+                raise ValueError(f"decode phase must be decode-mode, got "
+                                 f"{sc.mode!r}")
+            phases.append(Phase(sc, steps=decode_steps, kv_growth=1,
+                                name="decode"))
+        return Job(phases=tuple(phases), name=pre.scenario.spec.name)
+
+    def disaggregate(self, *, prefill_pool=None, decode_pool=None,
+                     kv_transfer: Optional[float] = None) -> "Job":
+        """Split prefill and decode onto separate pools (paper Table IX /
+        DistServe-style serving): prefill-mode phases adopt
+        ``prefill_pool``'s parallelization, decode-mode phases
+        ``decode_pool``'s, and the KV cache produced by prefill is
+        shipped between the pools at ``kv_transfer`` bytes/s (default:
+        the profile's link bandwidth).  Pools are :class:`ParallelCfg`,
+        a scenario, or a dict of :meth:`Scenario.parallel` kwargs."""
+        out = []
+        for ph in self.phases:
+            pool = {"prefill": prefill_pool,
+                    "decode": decode_pool}.get(ph.scenario.mode)
+            if pool is None:
+                out.append(ph)
+                continue
+            cfg = _as_cfg(pool, ph.scenario)
+            out.append(replace(ph, scenario=ph.scenario.with_cfg(cfg),
+                               pool=ph.scenario.mode))
+        return replace(self, phases=tuple(out), disaggregated=True,
+                       kv_transfer_bw=kv_transfer if kv_transfer is not None
+                       else self.kv_transfer_bw)
+
+    def with_kv_transfer(self, bw: float) -> "Job":
+        """Set the prefill→decode KV handoff bandwidth (bytes/s) used by
+        disaggregated evaluation and sweeps."""
+        return replace(self, kv_transfer_bw=bw)
+
+    def with_out_tokens(self, out_tokens: int) -> "Job":
+        """The same program generating ``out_tokens`` tokens: resizes
+        the growing-KV decode phase (requires exactly one);
+        ``out_tokens=1`` drops it entirely (prefill-only — the prompt's
+        first token is the whole generation)."""
+        if out_tokens < 1:
+            raise ValueError(f"out_tokens must be >= 1, got {out_tokens}")
+        growth = [i for i, p in enumerate(self.phases) if p.kv_growth]
+        if len(growth) != 1:
+            raise ValueError(f"with_out_tokens needs exactly one growing "
+                             f"decode phase, found {len(growth)}")
+        phases = list(self.phases)
+        if out_tokens == 1:
+            if not any(p.scenario.mode == "prefill" for p in phases):
+                raise ValueError("out_tokens=1 needs a prefill phase to "
+                                 "produce the token")
+            del phases[growth[0]]
+        else:
+            phases[growth[0]] = replace(phases[growth[0]],
+                                        steps=out_tokens - 1)
+        return replace(self, phases=tuple(phases))
+
+    # ---- derived --------------------------------------------------------
+    @property
+    def out_tokens(self) -> int:
+        """Tokens produced per sequence: one from prefill + one per
+        growing decode step."""
+        dec = sum(p.steps for p in self.phases
+                  if p.kv_growth and p.scenario.mode == "decode")
+        pre = 1 if any(p.scenario.mode == "prefill"
+                       for p in self.phases) else 0
+        return pre + dec
+
+    @property
+    def batch(self) -> int:
+        return self.phases[0].scenario.batch
+
+    def describe(self) -> str:
+        bits = []
+        for p in self.phases:
+            sc = p.scenario
+            tag = p.name or sc.mode
+            bits.append(f"{tag}×{p.steps}@{p.pool}[{sc.cfg.describe()}]")
+        return (self.name or self.phases[0].scenario.spec.name) \
+            + ": " + " → ".join(bits)
+
+    # ---- evaluation -----------------------------------------------------
+    def evaluate(self, hw: HardwareProfile = TPU_V5E) -> JobResult:
+        """End-to-end serving metrics for the whole timeline.
+
+        Static phases cost one trace simulation; growing-KV decode
+        phases cost O(1) engine evaluations via the closed-form
+        :class:`~repro.core.serving.DecodeSeries` (exact on linear
+        stretches of the per-step time, pinned-error subdivision at
+        breakpoints).  For disaggregated jobs the prefill→decode KV
+        handoff is charged at :attr:`kv_transfer_bw`."""
+        phases_out: list[PhaseResult] = []
+        evals = {"lowerings": 0, "samples": 0, "trace_sims": 0}
+        ttft = None
+        decode_total = 0.0
+        decode_steps = 0
+        elapsed = 0.0
+        first_series: Optional[DecodeSeries] = None
+        for ph in self.phases:
+            sc = ph.scenario
+            hw_eff = sc._effective_hw(hw)
+            algos = dict(sc.algorithms) or None
+            if ph.kv_growth:
+                series = _series_for(sc, ph.steps)
+                if first_series is None:
+                    first_series = series
+                # the range endpoints are reported on the PhaseResult
+                # anyway, so simulate them once and seed the closed-form
+                # sum with their step times instead of evaluating twice
+                sim0 = series.step_sim(0, hw_eff, algorithms=algos)
+                sim_n = series.step_sim(ph.steps - 1, hw_eff,
+                                        algorithms=algos)
+                t_total, n = series.total_time(
+                    hw_eff, steps=ph.steps, algorithms=algos,
+                    seed={0: sim0.step_time,
+                          ph.steps - 1: sim_n.step_time})
+                mem = series.step_memory(ph.steps - 1, exact=False)
+                kv_loc = series.kv_bytes(ph.steps - 1, local=True)
+                kv_end = series.kv_bytes(ph.steps - 1)
+                evals["lowerings"] += series.engine_calls
+                evals["samples"] += n + 2
+                pr = PhaseResult(
+                    name=ph.name or sc.mode, pool=ph.pool, mode=sc.mode,
+                    steps=ph.steps, time=t_total,
+                    step_first=sim0.step_time, step_last=sim_n.step_time,
+                    evals=n, peak_gb=mem.peak_gb + kv_loc / 2**30,
+                    kv_bytes_end=kv_end, world=sc.world, sim=sim_n)
+                decode_total += t_total
+                decode_steps += ph.steps
+            else:
+                tr = sc.trace()
+                sim = tr.simulate(hw)
+                mem = tr.memory()
+                t_total = sim.step_time * ph.steps
+                evals["trace_sims"] += 1
+                pr = PhaseResult(
+                    name=ph.name or sc.mode, pool=ph.pool, mode=sc.mode,
+                    steps=ph.steps, time=t_total,
+                    step_first=sim.step_time, step_last=sim.step_time,
+                    evals=1, peak_gb=mem.peak_gb, world=sc.world, sim=sim)
+            phases_out.append(pr)
+            elapsed += pr.time
+            if ttft is None and sc.mode == "prefill":
+                ttft = elapsed
+        kv_bytes = kv_time = 0.0
+        if self.disaggregated and first_series is not None:
+            kv_bytes = first_series.kv_bytes(0)
+            bw = self.kv_transfer_bw if self.kv_transfer_bw is not None \
+                else hw.link_bw
+            kv_time = kv_bytes / bw if bw else 0.0
+            # the handoff happens once, between prefill and decode
+            for pr in phases_out:
+                if pr.mode == "prefill":
+                    pr.kv_bytes_end = kv_bytes
+        elif first_series is not None:
+            for pr in phases_out:
+                if pr.mode == "prefill":
+                    pr.kv_bytes_end = first_series.kv_bytes(0)
+        return JobResult(
+            phases=phases_out, batch=self.batch,
+            out_tokens=self.out_tokens,
+            ttft=ttft if ttft is not None else 0.0,
+            tpot=(decode_total / decode_steps) if decode_steps else 0.0,
+            total_time=elapsed + kv_time,
+            kv_transfer_bytes=kv_bytes, kv_transfer_time=kv_time,
+            disaggregated=self.disaggregated, engine_evals=evals,
+            label=self.describe())
+
+    # ---- DSE ------------------------------------------------------------
+    def sweep(self, world: int, hw: HardwareProfile = TPU_V5E, *,
+              out_tokens=None, splits=None,
+              mem_limit_gb: Optional[float] = None, **enum_kw) -> list:
+        """Serving DSE: rank parallelizations (and, with ``splits``,
+        prefill/decode pool partitions) by generated tokens/s.
+
+        ``out_tokens`` makes the generation length a swept dimension;
+        ``splits`` is an iterable of ``(prefill_world, decode_world)``
+        pool partitions (or ``"auto"`` for the power-of-two splits of
+        ``world``) — each split is optimized per pool *independently*
+        (the metrics decompose: TTFT depends only on the prefill cfg,
+        the decode total only on the decode cfg, and the KV handoff
+        bytes are sharding-invariant).  Returns
+        :class:`~repro.core.dse.ServingPoint` rows sorted by tokens/s;
+        see :func:`repro.core.dse.enumerate_pool_splits`."""
+        from .core.dse import ServingPoint, enumerate_configs, \
+            enumerate_pool_splits
+        # descending: the largest length builds each cfg's series once;
+        # every smaller length replays a prefix of it (total_time clips)
+        toks = tuple(sorted(set(out_tokens), reverse=True)) \
+            if out_tokens else (self.out_tokens,)
+        if any(n != self.out_tokens for n in toks) \
+                and not any(p.kv_growth for p in self.phases):
+            raise ValueError(
+                "sweeping out_tokens needs a growing decode phase in the "
+                "job (this is a static program — build one with "
+                "Scenario.generation(out_tokens=...) or Job.request)")
+        points: list[ServingPoint] = []
+        if splits is None:
+            for cfg in enumerate_configs(world, **enum_kw):
+                for n in toks:
+                    try:
+                        base = self if n == self.out_tokens \
+                            else self.with_out_tokens(n)
+                        res = base._on_cfg(cfg).evaluate(hw)
+                    except InfeasibleConfigError:
+                        continue
+                    if mem_limit_gb is not None \
+                            and res.peak_gb > mem_limit_gb:
+                        continue
+                    points.append(ServingPoint(
+                        out_tokens=n, split=(world,), prefill_cfg=cfg,
+                        decode_cfg=cfg, result=res))
+        else:
+            if splits == "auto":
+                splits = enumerate_pool_splits(world)
+            for wp, wd in splits:
+                if wp + wd != world:
+                    raise ValueError(f"split ({wp}, {wd}) does not "
+                                     f"partition world={world}")
+                for n in toks:
+                    pt = self._best_split_point(wp, wd, n, hw,
+                                                mem_limit_gb, enum_kw)
+                    if pt is not None:
+                        points.append(pt)
+        points.sort(key=lambda p: -p.result.tokens_per_s)
+        return points
+
+    def _on_cfg(self, cfg: ParallelCfg) -> "Job":
+        """Every phase on ONE pool with ``cfg`` — a genuinely colocated
+        job (pool names and the disaggregated flag reset, so no phantom
+        KV handoff is charged to colocated sweep points)."""
+        return replace(self, disaggregated=False, phases=tuple(
+            replace(p, scenario=p.scenario.with_cfg(cfg), pool="default")
+            for p in self.phases))
+
+    def _best_split_point(self, wp: int, wd: int, n: int,
+                          hw: HardwareProfile, mem_limit_gb, enum_kw):
+        """Optimize one (prefill_world, decode_world) partition.
+
+        The metrics decompose — TTFT depends only on the prefill cfg,
+        the decode total only on the decode cfg, and the handoff bytes
+        are sharding-invariant — so each pool is optimized on its OWN
+        cost only (prefill: step time via :meth:`Scenario.sweep`;
+        decode: closed-form series total), and the full job is
+        evaluated exactly once at the end."""
+        from .core.dse import ServingPoint, enumerate_configs
+        base = self if n == self.out_tokens else self.with_out_tokens(n)
+        pre_sc = next((p.scenario for p in base.phases
+                       if p.scenario.mode == "prefill"), None)
+        dec_ph = next((p for p in base.phases if p.kv_growth), None)
+        if pre_sc is None or dec_ph is None:
+            return None
+        best_pre = None
+        for pt in pre_sc.sweep(wp, hw, mem_limit_gb=mem_limit_gb,
+                               **enum_kw):
+            if "OOM" not in pt.label:
+                best_pre = pt.cfg
+                break
+        if best_pre is None:
+            return None
+        best_dec, best_dec_t = None, None
+        for cfg in enumerate_configs(wd, **enum_kw):
+            dec_sc = dec_ph.scenario.with_cfg(cfg)
+            try:
+                series = _series_for(dec_sc, dec_ph.steps)
+                # same effective fabric as the final evaluate (the
+                # scenario's attached topology overlays the profile)
+                t_dec, _ = series.total_time(
+                    dec_sc._effective_hw(hw), steps=dec_ph.steps,
+                    algorithms=dict(dec_sc.algorithms) or None)
+            except InfeasibleConfigError:
+                continue
+            if mem_limit_gb is not None:
+                peak = series.step_memory(
+                    dec_ph.steps - 1, exact=False).peak_gb \
+                    + series.kv_bytes(dec_ph.steps - 1,
+                                      local=True) / 2**30
+                if peak > mem_limit_gb:
+                    continue
+            if best_dec_t is None or t_dec < best_dec_t:
+                best_dec, best_dec_t = cfg, t_dec
+        if best_dec is None:
+            return None
+        res = base.disaggregate(prefill_pool=best_pre,
+                                decode_pool=best_dec,
+                                kv_transfer=self.kv_transfer_bw
+                                ).evaluate(hw)
+        if mem_limit_gb is not None and res.peak_gb > mem_limit_gb:
+            return None
+        return ServingPoint(out_tokens=n, split=(wp, wd),
+                            prefill_cfg=best_pre, decode_cfg=best_dec,
+                            result=res)
+
+    # ---- export ---------------------------------------------------------
+    def export_chakra(self, out_dir: str,
+                      ranks: Optional[Iterable[int]] = None) -> int:
+        """Write the whole multi-phase timeline as per-rank Chakra JSON:
+        phase bodies chained by phase-boundary control deps, decode
+        phases stamped with their KV span (``kv_start``/``kv_end``/
+        ``steps``), and — for disaggregated jobs — kv-transfer
+        Send/Recv comm nodes between the pools (see
+        :func:`repro.core.chakra.export_job`)."""
+        from .core.chakra import export_job
+        items = []
+        kv_bytes = 0.0
+        for ph in self.phases:
+            sc = ph.scenario
+            if ph.kv_growth:
+                series = _series_for(sc, ph.steps)
+                w = series.step_workload(0, name=f"{sc.spec.name}/decode")
+                w.meta = {"phase": ph.name or sc.mode, "pool": ph.pool,
+                          "steps": ph.steps, "kv_start": sc.kv_len,
+                          "kv_end": sc.kv_len + ph.steps - 1}
+                if not kv_bytes:
+                    kv_bytes = series.kv_bytes(0)
+            else:
+                w = sc.trace().workload
+                w.meta = {"phase": ph.name or sc.mode, "pool": ph.pool,
+                          "steps": ph.steps}
+            items.append(w)
+        return export_job(items, out_dir, ranks=ranks,
+                          kv_transfer_bytes=kv_bytes
+                          if self.disaggregated else 0.0)
+
+
+def _series_for(sc: Scenario, steps: int) -> DecodeSeries:
+    """The process-wide cached closed-form series for one decode phase."""
+    return _series.series(sc, steps)

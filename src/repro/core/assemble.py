@@ -12,6 +12,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
+import sympy as sp
+
 from . import modules as M
 from .stg import GraphBuilder, Graph, add_optimizer, backward
 from .symbolic import Env
@@ -154,13 +156,34 @@ class ModelSpec:
 
 
 def bind_env(spec: ModelSpec, *, batch: int, seq: int,
-             kv_len: Optional[int] = None) -> Env:
-    """Bind all model + workload symbols for instantiation."""
+             kv_len: Optional[int] = None,
+             mode: Optional[str] = None) -> Env:
+    """Bind all model + workload symbols for instantiation.
+
+    ``mode`` (when the caller knows it) tightens the binding for decode
+    phases: ``kv_len`` becomes REQUIRED — the historical ``kv = seq``
+    fallback would silently model a decode step against a 1-token cache
+    — and the MoE expert capacity ``Cap`` is bound to the *expected*
+    routed-token count of the actual phase shape, ``B*S*K/E`` exactly
+    (possibly fractional), instead of ``max(1, ceil(...))``: with one
+    token per sequence the ceiling floor would charge every expert a
+    full token even when ``B*K << E``, inflating decode MoE cost by up
+    to ``E/(B*K)`` (paper Table IX regime)."""
     m = spec.mla or MLASpec()
     s = spec.ssm or SSMSpec()
     moe = spec.moe or MoESpec(1, 1, 0, spec.d_ff)
+    if mode == "decode" and kv_len is None:
+        raise ValueError(
+            "decode mode requires kv_len: a decode step is costed against "
+            "an existing KV cache, and the kv=seq fallback (seq=1) would "
+            "silently model a 1-token cache — pass kv_len=<context length> "
+            "(e.g. Scenario.decode(batch=..., kv_len=...))")
     kv = kv_len if kv_len is not None else seq
     nkv = max(1, spec.n_kv_heads)
+    if mode == "decode":
+        cap = sp.Rational(batch * seq * moe.top_k, moe.n_experts)
+    else:
+        cap = max(1, math.ceil(batch * seq * moe.top_k / moe.n_experts))
     e = Env(
         B=batch, S=seq, Skv=kv,
         H=spec.d_model, Dff=spec.d_ff, V=spec.vocab,
@@ -168,7 +191,7 @@ def bind_env(spec: ModelSpec, *, batch: int, seq: int,
         DH=spec.head_dim, L=spec.n_layers,
         E=moe.n_experts, K=moe.top_k, SH=max(1, moe.n_shared),
         Dffe=moe.d_expert or spec.d_ff,
-        Cap=max(1, math.ceil(batch * seq * moe.top_k / moe.n_experts)),
+        Cap=cap,
         R=(m.kv_lora if spec.block == "mla" else spec.rwkv_decay_rank),
         Rq=m.q_lora, DR=m.rope_dim, DN=m.nope_dim, DV=m.v_dim,
         Din=s.expand * spec.d_model, Pst=s.d_state,

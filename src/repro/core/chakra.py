@@ -180,6 +180,160 @@ def _expanded_nodes(w: Workload, stage: int, *,
     return out
 
 
+def _offset_ids(nodes: list[dict], base: int) -> list[dict]:
+    """Shift a phase body's node ids by ``base`` (recv-side negative ids
+    shift negatively, preserving the ``-uid`` pairing scheme)."""
+    out = []
+    for nd in nodes:
+        inst = dict(nd)
+        inst["id"] = nd["id"] + base if nd["id"] > 0 else nd["id"] - base
+        inst["data_deps"] = [d + base if d > 0 else d - base
+                             for d in nd["data_deps"]]
+        inst["ctrl_deps"] = [c + base if c > 0 else c - base
+                             for c in nd.get("ctrl_deps", [])]
+        inst["attrs"] = dict(nd["attrs"])
+        out.append(inst)
+    return out
+
+
+def export_job(workloads, out_dir: str, *,
+               ranks: Optional[Iterable[int]] = None,
+               kv_transfer_bytes: float = 0.0,
+               decompose_alltoall: bool = False,
+               comm_model: "CollectiveModel | None" = None) -> int:
+    """Stamp a multi-phase *job* timeline as one coherent per-rank trace
+    set (the phase-program redesign's export).
+
+    ``workloads`` is the job's phase list in execution order — one
+    representative :class:`~repro.core.instantiate.Workload` per phase,
+    carrying ``w.meta`` (``phase`` name, ``pool``, ``steps``, and for
+    growing-KV decode phases ``kv_start``/``kv_end``).  Within a rank's
+    file the phase bodies are chained by *phase-boundary control deps*
+    (every source node of phase ``k+1`` gains a ctrl dep on the tail of
+    phase ``k``), decode bodies carry ``steps``/``kv_start``/``kv_end``
+    attrs (the body repeats once per decode index with the KV length
+    advancing across the span), and phases keep their own data deps —
+    a downstream simulator replays the whole request timeline from one
+    trace.
+
+    Pools partition the global rank space in order of first appearance
+    (prefill pool ranks first, then decode pool ranks).  When
+    ``kv_transfer_bytes`` > 0 and consecutive phases sit on different
+    pools, the boundary is stamped as an explicit KV-cache handoff:
+    every source-pool rank ends its pre-boundary stream with a
+    ``COMM_SEND_NODE`` (its share of the cache), every destination-pool
+    rank starts with the matching ``COMM_RECV_NODE`` — so the transfer
+    is visible to the feeder as real communication, not a gap.  A
+    ``job.json`` manifest records the pool layout and phase metadata.
+    Returns the number of rank files written."""
+    os.makedirs(out_dir, exist_ok=True)
+    pools: dict[str, dict] = {}
+    order: list[str] = []
+    metas = []
+    for w in workloads:
+        meta = dict(w.meta or {})
+        pool = meta.get("pool", "default")
+        metas.append(meta)
+        if pool not in pools:
+            pools[pool] = {"world": w.cfg.world, "offset": 0}
+            order.append(pool)
+        elif pools[pool]["world"] != w.cfg.world:
+            raise ValueError(
+                f"pool {pool!r} hosts phases with different world sizes "
+                f"({pools[pool]['world']} vs {w.cfg.world})")
+    off = 0
+    for name in order:
+        pools[name]["offset"] = off
+        off += pools[name]["world"]
+    total_world = off
+    # the (single) cross-pool boundary carries the KV handoff
+    boundary = None
+    if kv_transfer_bytes > 0:
+        for i in range(1, len(workloads)):
+            if metas[i].get("pool", "default") != \
+                    metas[i - 1].get("pool", "default"):
+                boundary = i
+                break
+    stage_nodes_cache: dict[tuple, list] = {}
+
+    def phase_body(i: int, stage: int) -> list:
+        key = (i, stage)
+        hit = stage_nodes_cache.get(key)
+        if hit is None:
+            w = workloads[i]
+            hit = export_stage(w, stage,
+                               decompose_alltoall=decompose_alltoall,
+                               comm_model=comm_model)["nodes"]
+            extra = {k: str(v) for k, v in metas[i].items()}
+            for nd in hit:
+                nd["attrs"].update(extra)
+            stage_nodes_cache[key] = hit
+        return hit
+
+    count = 0
+    rank_list = list(ranks) if ranks is not None else list(range(total_world))
+    for rank in rank_list:
+        if not 0 <= rank < total_world:
+            raise ValueError(f"rank {rank} out of range for job world "
+                             f"{total_world} (pools {pools})")
+        pname = next(p for p in reversed(order)
+                     if pools[p]["offset"] <= rank)
+        local = rank - pools[pname]["offset"]
+        nodes: list[dict] = []
+        prev_tail = None
+        base = 0
+        coords = {}
+
+        def append_body(body: list) -> None:
+            nonlocal base, prev_tail
+            shifted = _offset_ids(body, base)
+            ids = {nd["id"] for nd in shifted}
+            for nd in shifted:
+                nd["data_deps"] = [d for d in nd["data_deps"] if d in ids]
+                if prev_tail is not None and not nd["data_deps"] \
+                        and not nd["ctrl_deps"]:
+                    nd["ctrl_deps"] = [prev_tail]
+            nodes.extend(shifted)
+            base = max(abs(nd["id"]) for nd in shifted) + 1
+            prev_tail = shifted[-1]["id"]
+
+        for i, w in enumerate(workloads):
+            if metas[i].get("pool", "default") != pname:
+                continue
+            if boundary is not None and i == boundary:
+                # destination pool: the handoff lands before this phase
+                append_body([{
+                    "id": 1, "name": "kv_transfer_recv",
+                    "type": "COMM_RECV_NODE", "data_deps": [],
+                    "ctrl_deps": [],
+                    "attrs": {"phase": "kv_transfer", "pool": pname,
+                              "comm_size":
+                                  kv_transfer_bytes / w.cfg.world}}])
+            coords = rank_coords(local, w.cfg)
+            append_body(phase_body(i, coords["pp"]))
+            if boundary is not None and i == boundary - 1:
+                # source pool: ship this rank's share of the cache
+                append_body([{
+                    "id": 1, "name": "kv_transfer_send",
+                    "type": "COMM_SEND_NODE", "data_deps": [],
+                    "ctrl_deps": [],
+                    "attrs": {"phase": "kv_transfer", "pool": pname,
+                              "comm_size":
+                                  kv_transfer_bytes / w.cfg.world}}])
+        trace = {"schema": "Chakra-json-v0.0.4",
+                 "job": workloads[0].name, "rank": rank, "pool": pname,
+                 "coords": coords, "nodes": nodes}
+        with open(os.path.join(out_dir, f"rank{rank}.json"), "w") as f:
+            json.dump(trace, f)
+        count += 1
+    with open(os.path.join(out_dir, "job.json"), "w") as f:
+        json.dump({"schema": "Chakra-json-v0.0.4-job",
+                   "pools": pools, "world": total_world,
+                   "kv_transfer_bytes": kv_transfer_bytes,
+                   "phases": metas}, f)
+    return count
+
+
 def rank_coords(rank: int, cfg) -> dict:
     """Decompose a flat rank id into (pp stage, per-axis coordinates).
 

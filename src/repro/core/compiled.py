@@ -224,25 +224,45 @@ class CostProgram:
                 wgrad=any(t.kind == "grad" for t in op.outs)))
 
         # ---- bind: one lambdified evaluation of all coefficients ---------
-        vals = _evaluate_exprs(exprs, env)
-        self._vals = vals
-        nt = len(tensors)
+        # lowering state kept for re-binding (the decode series replays
+        # the SAME lowered structure under a sweep of Skv values)
+        self._exprs = exprs
+        self._t_ci = t_ci
+        self._t_db = t_db
+        self._t_part = t_part
+        self._nt = len(tensors)
         self._db = np.asarray(t_db, dtype=np.float64)
         groups: dict[tuple, list[int]] = {}
         for i, pat in enumerate(t_part):
             groups.setdefault(pat, []).append(i)
+        self._group_ix = [(pat, np.asarray(ix, dtype=np.intp))
+                          for pat, ix in groups.items()]
+        self.bind_vals(_evaluate_exprs(exprs, env))
+
+    def bind_vals(self, vals: list) -> None:
+        """(Re)bind the coefficient values this program replays.
+
+        ``vals`` must follow ``self._exprs`` order.  The float-conversion
+        points and arithmetic order are EXACTLY those of the original
+        one-shot binding, so a program re-bound with exactly-evaluated
+        values stays bit-identical to a fresh ``CostProgram`` built under
+        the corresponding Env (the decode-series spot-check guarantee).
+        Clears the per-config local-size cache; the pipeline layouts and
+        lifetime structures are value-independent and survive."""
+        t_ci, t_db = self._t_ci, self._t_db
+        self._vals = vals
         self._groups = [
-            (pat, np.asarray(ix, dtype=np.intp),
+            (pat, ix,
              np.asarray([float(vals[t_ci[i]]) for i in ix], dtype=np.float64))
-            for pat, ix in groups.items()]
-        self._nt = nt
+            for pat, ix in self._group_ix]
         # global bytes per tensor (collectives use the *unsharded* volume)
-        self._gb = [float(vals[t_ci[i]] * t_db[i]) for i in range(nt)]
+        self._gb = [float(vals[t_ci[i]] * t_db[i]) for i in range(self._nt)]
         self._wnumel = [float(vals[c]) for c in t_ci]
         # bound einsum letter extents (reference uses fevaluate -> float)
         self._eins_f = {
             i: tuple((float(vals[c]), axes) for c, axes in letters)
             for i, letters in self._eins.items()}
+        self._point_cache.clear()
 
     # ---- per-config local sizes -----------------------------------------
     def _local(self, cfg: ParallelCfg) -> tuple[list, list]:

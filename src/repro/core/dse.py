@@ -94,6 +94,46 @@ class SweepResult(list):
         return list(self)
 
 
+@dataclass
+class ServingPoint:
+    """One point of a serving DSE (:meth:`repro.api.Job.sweep`): a
+    generation length + pool partition + per-pool parallelization,
+    scored by end-to-end tokens/s (``result`` is the evaluated
+    :class:`~repro.core.serving.JobResult`)."""
+    out_tokens: int
+    split: tuple                     # (world,) colocated | (wp, wd)
+    prefill_cfg: ParallelCfg
+    decode_cfg: ParallelCfg
+    result: object
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.result.tokens_per_s
+
+    def row(self) -> dict:
+        split = "colocated" if len(self.split) == 1 \
+            else f"{self.split[0]}+{self.split[1]}"
+        return {"out_tokens": self.out_tokens, "split": split,
+                "prefill": self.prefill_cfg.describe(),
+                "decode": self.decode_cfg.describe(),
+                **self.result.row()}
+
+
+def enumerate_pool_splits(world: int) -> list[tuple[int, int]]:
+    """Candidate ``(prefill_world, decode_world)`` partitions of a
+    serving cluster: every power-of-two prefill share (decode gets the
+    remainder) — the Table IX observation is that the two phases prefer
+    different cluster sizes, so the split is a genuine DSE dimension."""
+    if world < 2:
+        raise ValueError(f"pool splits need world >= 2, got {world}")
+    splits = []
+    p = 1
+    while p < world:
+        splits.append((p, world - p))
+        p *= 2
+    return splits
+
+
 def _pow2_divisors(n: int) -> list[int]:
     out = [1]
     while out[-1] * 2 <= n:

@@ -66,6 +66,8 @@ class Workload:
     nodes: list[NodeRec]
     stage_of: dict[int, int]
     name: str = "workload"
+    meta: dict = field(default_factory=dict)    # phase-program stamping
+    # (phase name / pool / kv span) read by chakra.export_job
 
     # ---- paper-table style summaries ------------------------------------
     def op_counts(self, stage: int = 0, per: str = "step") -> dict[str, int]:

@@ -61,6 +61,30 @@ def _local_bytes(t: STensor, env: Env, mesh: dict[str, int]) -> float:
     return (env.fevaluate(prod(t.local_shape(mesh)))) * DTYPE_BYTES[t.dtype]
 
 
+def kv_cache_bytes(graph: Graph, cfg: ParallelCfg, env: Env, *,
+                   local: bool = False) -> float:
+    """Bytes of the KV-cache state a decode graph reads: the root inputs
+    whose shape depends on the KV length symbol ``Skv`` (k/v caches for
+    GQA, latent+rope caches for MLA).  ``local=True`` returns one rank's
+    shard (mesh-axis sharding per tensor plus an even per-stage layer
+    split for ``pp > 1``); the default is the GLOBAL cache — the
+    quantity a prefill→decode handoff must ship between pools,
+    invariant under either pool's sharding/placement (reference for the
+    compiled decode series' ``kv_bytes``)."""
+    from .symbolic import sym
+    skv = sym("Skv")
+    mesh = cfg.mesh if local else {}
+    total = 0.0
+    for t in graph.inputs:
+        if any(skv in getattr(d, "free_symbols", ())
+               for d in t.shape):
+            shape = t.local_shape(mesh) if local else t.shape
+            total += env.fevaluate(prod(shape)) * DTYPE_BYTES[t.dtype]
+    if local:
+        total /= max(1, cfg.pp)
+    return total
+
+
 def peak_memory(graph: Graph, cfg: ParallelCfg, env: Env,
                 plan: PipelinePlan | None = None, *, stage: int = 0,
                 recompute: bool = False, master_fp32: bool = True,

@@ -47,14 +47,25 @@ Senc = sym("Senc")      # encoder context length (enc-dec / VLM)
 
 
 class Env(dict):
-    """Binding of model symbols -> concrete ints, with expression evaluation."""
+    """Binding of model symbols -> concrete values, with expression evaluation.
 
-    def __init__(self, bindings: Mapping[Union[str, sp.Symbol], int] | None = None, **kw: int):
+    Values are exact: Python ints, or ``sympy.Rational`` for the few
+    genuinely fractional bindings (MoE expert capacity at decode is the
+    *expected* routed-token count ``B*S*K/E``, which need not be
+    integral).  Exactness matters — the compiled backend converts bound
+    coefficient values to floats at fixed points, and bit-identical
+    backend parity relies on both paths starting from the same exact
+    value."""
+
+    def __init__(self, bindings: Mapping[Union[str, sp.Symbol], int] | None = None, **kw):
         super().__init__()
         merged: dict = dict(bindings or {})
         merged.update(kw)
         for k, v in merged.items():
-            self[sym(k) if isinstance(k, str) else k] = int(v)
+            if not isinstance(v, int):
+                r = sp.Rational(v)
+                v = int(r) if r.is_Integer else r
+            self[sym(k) if isinstance(k, str) else k] = v
         self._cache: dict = {}
 
     def evaluate(self, expr: Expr) -> int:

@@ -1,0 +1,368 @@
+"""Phase-program serving tests: closed-form decode vs per-step replay
+(bit-identical spot checks, exact sums), TTFT/TPOT pinned against the
+reference pipeline and hand-computed KV math, disaggregated KV-transfer
+invariance, O(1)-evaluation guarantees, and the serve/Cap footgun fixes.
+"""
+import json
+import os
+import tempfile
+
+import pytest
+import sympy as sp
+
+from repro import Job, ModelSpec, MoESpec, Scenario, TPU_V5E
+from repro.core.assemble import bind_env, build_graph, total_layers
+from repro.core.distribute import distribute
+from repro.core.graphdist import apply_pipeline
+from repro.core.instantiate import instantiate
+from repro.core.memory import kv_cache_bytes
+from repro.core.serving import DecodeSeries
+from repro.core.simulate import simulate, sum_convex_series
+
+TINY = ModelSpec(name="srv", n_layers=2, d_model=128, n_heads=4,
+                 n_kv_heads=2, d_ff=256, vocab=1024)
+WINDOWED = ModelSpec(name="srv-win", n_layers=2, d_model=128, n_heads=4,
+                     n_kv_heads=2, d_ff=256, vocab=1024, window=96)
+MOE = ModelSpec(name="srv-moe", n_layers=2, d_model=128, n_heads=4,
+                n_kv_heads=4, d_ff=256, vocab=512,
+                moe=MoESpec(n_experts=16, top_k=2, d_expert=64))
+
+BATCH, KV0, STEPS = 4, 64, 32
+
+
+def _sympy_step(spec, cfg, t, *, batch=BATCH, kv0=KV0):
+    """Reference per-step pipeline replay at decode index ``t``."""
+    env = bind_env(spec, batch=batch, seq=1, kv_len=kv0 + t, mode="decode")
+    g = build_graph(spec, mode="decode").graph
+    distribute(g, cfg, env)
+    plan = apply_pipeline(g, cfg.pp, total_layers(spec))
+    return instantiate(g, cfg, env, plan)
+
+
+def _series(spec, sc, steps=STEPS, kv0=KV0):
+    return DecodeSeries(lambda: sc.builder().graph, spec, sc.cfg,
+                        batch=BATCH, kv0=kv0, steps=steps)
+
+
+# ---- closed form vs per-step replay ---------------------------------------
+
+@pytest.mark.parametrize("spec,t_checks", [
+    (TINY, (0, 13, STEPS - 1)),
+    (WINDOWED, (0, 31, 32, 33, STEPS - 1)),   # window hits at kv=96 (t=32)
+], ids=["dense", "sliding-window"])
+def test_decode_series_spot_checks_bit_identical(spec, t_checks):
+    """Any individual decode index must replay bit-identically (==) to
+    the full per-step sympy pipeline — per-node costs AND simulated
+    step time."""
+    sc = Scenario(spec).decode(batch=BATCH, kv_len=KV0).parallel(dp=2, tp=2)
+    series = _series(spec, sc)
+    for t in t_checks:
+        wr = _sympy_step(spec, sc.cfg, t)
+        wc = series.step_workload(t)
+        assert len(wr.nodes) == len(wc.nodes)
+        for a, b in zip(wr.nodes, wc.nodes):
+            assert a.flops == b.flops, (t, a.name)
+            assert a.bytes_accessed == b.bytes_accessed, (t, a.name)
+            assert a.out_bytes == b.out_bytes, (t, a.name)
+            assert a.comm == b.comm, (t, a.name)
+        assert simulate(wr, TPU_V5E).step_time == \
+            simulate(wc, TPU_V5E).step_time, t
+
+
+@pytest.mark.parametrize("spec", [TINY, WINDOWED],
+                         ids=["dense", "sliding-window"])
+def test_closed_form_sum_matches_per_step_sum(spec):
+    """The analytic decode total must equal the explicit sum of every
+    per-step replay (exact for the linear stretches; the windowed model
+    adds a genuine breakpoint at the window boundary)."""
+    sc = Scenario(spec).decode(batch=BATCH, kv_len=KV0).parallel(dp=2, tp=2)
+    series = _series(spec, sc)
+    total, evals = series.total_time(TPU_V5E)
+    brute = sum(simulate(_sympy_step(spec, sc.cfg, t), TPU_V5E).step_time
+                for t in range(STEPS))
+    assert abs(total - brute) / brute < 1e-9
+    assert evals <= 12, f"{evals} evaluations for {STEPS} linear-ish steps"
+
+
+def test_sum_convex_series_exact_on_linear_and_piecewise():
+    total, n = sum_convex_series(lambda t: 3.0 + 0.5 * t, 0, 511)
+    assert total == pytest.approx(3.0 * 512 + 0.5 * 511 * 512 / 2, rel=1e-12)
+    assert n == 3                                 # endpoints + midpoint
+    f = lambda t: max(10.0, 2.0 * t)              # breakpoint at t=5
+    total, n = sum_convex_series(f, 0, 100)
+    assert total == pytest.approx(sum(f(t) for t in range(101)), rel=1e-12)
+    assert n < 40
+
+
+def test_decode_series_is_o1_in_steps():
+    """512 decode steps must cost O(1) engine work: 2 lowerings (range
+    endpoints' guard check) and a handful of samples — not 512."""
+    sc = Scenario(TINY).decode(batch=BATCH, kv_len=KV0).parallel(dp=2)
+    series = _series(TINY, sc, steps=512)
+    _, evals = series.total_time(TPU_V5E)
+    assert series.engine_calls <= 2
+    assert evals <= 12
+
+
+# ---- Job metrics -----------------------------------------------------------
+
+def test_job_ttft_tpot_pinned_against_reference():
+    """TTFT == the prefill phase's simulated time; TPOT == the mean of
+    the per-step reference replays; tokens/s follows from both."""
+    sc = Scenario(TINY).prefill(batch=BATCH, seq=KV0).parallel(dp=2, tp=2)
+    job = sc.generation(out_tokens=STEPS + 1)
+    res = job.evaluate(TPU_V5E)
+
+    ttft_ref = sc.trace().simulate(TPU_V5E).step_time
+    assert res.ttft == ttft_ref
+    dec_ref = [simulate(_sympy_step(TINY, sc.cfg, t), TPU_V5E).step_time
+               for t in range(STEPS)]
+    assert res.tpot == pytest.approx(sum(dec_ref) / STEPS, rel=1e-9)
+    total_ref = ttft_ref + sum(dec_ref)
+    assert res.total_time == pytest.approx(total_ref, rel=1e-9)
+    assert res.tokens_per_s == pytest.approx(
+        BATCH * (STEPS + 1) / total_ref, rel=1e-9)
+    assert res.out_tokens == STEPS + 1
+    # decode cost grows with the cache: last step >= first step
+    dec = next(p for p in res.phases if p.mode == "decode")
+    assert dec.step_last >= dec.step_first
+
+
+def test_job_kv_bytes_hand_computed():
+    """Global KV read by decode index t is hand-computable for GQA:
+    2 (k+v) * L * B * (kv0+t) * NKV * DH * 2 bytes (bf16)."""
+    sc = Scenario(TINY).prefill(batch=BATCH, seq=KV0).parallel(dp=2, tp=2)
+    series = _series(TINY, sc.decode(batch=BATCH, kv_len=KV0))
+    for t in (0, 7, STEPS - 1):
+        expect = 2 * TINY.n_layers * BATCH * (KV0 + t) \
+            * TINY.n_kv_heads * TINY.head_dim * 2
+        assert series.kv_bytes(t) == expect
+    res = sc.generation(out_tokens=STEPS + 1).evaluate(TPU_V5E)
+    assert res.peak_kv_gb == pytest.approx(
+        2 * TINY.n_layers * BATCH * (KV0 + STEPS - 1)
+        * TINY.n_kv_heads * TINY.head_dim * 2 / 2**30)
+
+
+def test_kv_transfer_bytes_invariant_under_placement_and_sharding():
+    """The prefill→decode handoff ships the GLOBAL cache: bytes must not
+    change with the decode pool's sharding or physical placement."""
+    sc = Scenario(TINY).prefill(batch=BATCH, seq=KV0)
+    job = sc.generation(out_tokens=17)
+    seen = set()
+    for pool in (dict(tp=4), dict(dp=4), dict(dp=2, tp=2),
+                 dict(dp=2, tp=2, pp=1)):
+        res = job.disaggregate(prefill_pool=dict(tp=2), decode_pool=pool,
+                               kv_transfer=100e9).evaluate(TPU_V5E)
+        seen.add(res.kv_transfer_bytes)
+    # placement permutations of the same factorization
+    for place in (("tp", "dp", "pp"), ("dp", "tp", "pp")):
+        dsc = sc.decode(batch=BATCH, kv_len=KV0) \
+            .parallel(dp=2, tp=2).placement(*place)
+        res = job.disaggregate(prefill_pool=dict(tp=2), decode_pool=dsc,
+                               kv_transfer=100e9).evaluate(TPU_V5E)
+        seen.add(res.kv_transfer_bytes)
+    assert len(seen) == 1, seen
+    # and it matches the reference graph-level accounting
+    env = bind_env(TINY, batch=BATCH, seq=1, kv_len=KV0, mode="decode")
+    g = build_graph(TINY, mode="decode").graph
+    cfg = Scenario(TINY).decode(batch=BATCH, kv_len=KV0) \
+        .parallel(dp=2, tp=2).cfg
+    distribute(g, cfg, env)
+    assert seen == {kv_cache_bytes(g, cfg, env)}
+
+
+def test_disaggregated_timeline_and_export():
+    sc = Scenario(TINY).prefill(batch=BATCH, seq=KV0)
+    job = sc.generation(out_tokens=9).disaggregate(
+        prefill_pool=dict(tp=2), decode_pool=dict(dp=2, tp=2),
+        kv_transfer=50e9)
+    res = job.evaluate(TPU_V5E)
+    assert res.disaggregated
+    assert res.kv_transfer_time == pytest.approx(
+        res.kv_transfer_bytes / 50e9)
+    assert res.total_time == pytest.approx(
+        sum(p.time for p in res.phases) + res.kv_transfer_time)
+
+    with tempfile.TemporaryDirectory() as d:
+        n = job.export_chakra(d)
+        assert n == 2 + 4                     # prefill world + decode world
+        man = json.load(open(os.path.join(d, "job.json")))
+        assert man["pools"]["prefill"]["world"] == 2
+        assert man["pools"]["decode"]["offset"] == 2
+        r_pre = json.load(open(os.path.join(d, "rank0.json")))
+        r_dec = json.load(open(os.path.join(d, "rank2.json")))
+        assert r_pre["pool"] == "prefill" and r_dec["pool"] == "decode"
+        sends = [nd for nd in r_pre["nodes"]
+                 if nd["type"] == "COMM_SEND_NODE"
+                 and nd["attrs"].get("phase") == "kv_transfer"]
+        recvs = [nd for nd in r_dec["nodes"]
+                 if nd["type"] == "COMM_RECV_NODE"
+                 and nd["attrs"].get("phase") == "kv_transfer"]
+        assert len(sends) == 1 and len(recvs) == 1
+        # per-pool shares sum back to the global handoff
+        assert sends[0]["attrs"]["comm_size"] * 2 == \
+            pytest.approx(res.kv_transfer_bytes)
+        assert recvs[0]["attrs"]["comm_size"] * 4 == \
+            pytest.approx(res.kv_transfer_bytes)
+        # decode body carries its KV span
+        dec_nodes = [nd for nd in r_dec["nodes"]
+                     if nd["attrs"].get("phase") == "decode"]
+        assert dec_nodes and dec_nodes[0]["attrs"]["kv_start"] == str(KV0)
+        assert dec_nodes[0]["attrs"]["steps"] == "8"
+        # phase-boundary control deps: the recv gates the decode body
+        recv_id = recvs[0]["id"]
+        gated = [nd for nd in dec_nodes if recv_id in nd["ctrl_deps"]]
+        assert gated, "decode phase must be control-dep-gated on the recv"
+
+
+def test_colocated_export_single_pool_chain():
+    sc = Scenario(TINY).prefill(batch=BATCH, seq=KV0).parallel(dp=2, tp=2)
+    job = sc.generation(out_tokens=5)
+    with tempfile.TemporaryDirectory() as d:
+        n = job.export_chakra(d)
+        assert n == 4
+        r0 = json.load(open(os.path.join(d, "rank0.json")))
+        phases = {nd["attrs"].get("phase") for nd in r0["nodes"]}
+        assert phases == {"prefill", "decode"}
+        ids = [nd["id"] for nd in r0["nodes"]]
+        assert len(ids) == len(set(ids))      # no collisions across phases
+        pre_tail = max(nd["id"] for nd in r0["nodes"]
+                       if nd["attrs"]["phase"] == "prefill")
+        gated = [nd for nd in r0["nodes"]
+                 if nd["attrs"]["phase"] == "decode"
+                 and pre_tail in nd["ctrl_deps"]]
+        assert gated, "decode must chain onto the prefill tail"
+
+
+def test_job_sweep_out_tokens_and_splits():
+    sc = Scenario(TINY).prefill(batch=8, seq=64)
+    job = sc.generation(out_tokens=17)
+    pts = job.sweep(8, TPU_V5E, out_tokens=(9, 17), max_tp=4, max_pp=1)
+    assert pts and {p.out_tokens for p in pts} == {9, 17}
+    assert all(pts[i].tokens_per_s >= pts[i + 1].tokens_per_s
+               for i in range(len(pts) - 1))
+    spts = job.sweep(8, TPU_V5E, splits="auto", max_tp=4, max_pp=1)
+    assert spts and all(p.split[0] + p.split[1] == 8 for p in spts)
+
+
+# ---- satellites: footguns --------------------------------------------------
+
+def test_serve_without_kv_len_raises():
+    """Scenario.serve(batch=b) used to silently model a decode step
+    against a 1-token cache (bind_env's kv = seq fallback)."""
+    with pytest.raises(ValueError, match="kv_len"):
+        Scenario(TINY).serve(batch=4)
+    with pytest.raises(ValueError, match="kv_len"):
+        bind_env(TINY, batch=4, seq=1, mode="decode")
+    # prefill fallback (kv = seq) stays
+    assert Scenario(TINY).serve(batch=4, seq=128).mode == "prefill"
+    env = bind_env(TINY, batch=4, seq=128, mode="prefill")
+    assert env[sp.Symbol("Skv", positive=True, integer=True)] == 128
+
+
+def test_moe_decode_capacity_tracks_routed_tokens():
+    """bind_env's train-style Cap = max(1, ceil(B*S*K/E)) floors at one
+    token per expert; at decode B*K can be far below E and expert cost
+    must scale with the ROUTED token count (B*S*K/E exactly), not the
+    expert count — the paper Table IX decode regime."""
+    from repro.core.symbolic import sym
+    env1 = bind_env(MOE, batch=1, seq=1, kv_len=64, mode="decode")
+    assert env1[sym("Cap")] == sp.Rational(2, 16)       # B*K/E = 2/16
+    env4 = bind_env(MOE, batch=4, seq=1, kv_len=64, mode="decode")
+    assert env4[sym("Cap")] == sp.Rational(8, 16)
+    # train binding unchanged (ceil, floored at 1)
+    env_t = bind_env(MOE, batch=1, seq=3)
+    assert env_t[sym("Cap")] == 1
+
+    def egate_flops(batch):
+        w = Scenario(MOE).decode(batch=batch, kv_len=64).trace().workload
+        return sum(n.flops for n in w.nodes if n.name == "egate0")
+
+    f1, f4 = egate_flops(1), egate_flops(4)
+    assert f4 == pytest.approx(4 * f1, rel=1e-12), \
+        "decode MoE cost must be linear in batch (old Cap floor broke this)"
+    # absolute scale: E * Cap == routed tokens, so the expert GEMM costs
+    # 2 * routed * H * Dffe flops
+    assert f1 == pytest.approx(2 * 1 * MOE.moe.top_k * MOE.d_model
+                               * MOE.moe.d_expert, rel=1e-12)
+
+
+def test_moe_decode_table9_expectations():
+    """Table IX regression (benchmarks/table9_moe_inference.py's claim,
+    pinned here so the Cap rebinding can't silently break it): on
+    deepseek-v2 the throughput-optimal EP cluster differs by phase —
+    growing 10→40 GPUs *improves* decode tokens/s/GPU while prefill
+    tokens/s/GPU degrades (prefill prefers the smaller cluster)."""
+    from repro import H100_HGX
+    from repro.configs import get
+    spec = get("deepseek-v2-236b").spec
+    rows = {}
+    for gpus in (10, 40):
+        ep = Scenario(spec).parallel(dp=gpus, ep=True)
+        batch = 13 * gpus
+        dec = ep.decode(batch=batch, kv_len=1024).trace().simulate(H100_HGX)
+        pre = ep.prefill(batch=batch, seq=1024).trace().simulate(H100_HGX)
+        rows[gpus] = (batch / dec.step_time / gpus,
+                      batch * 1024 / pre.step_time / gpus)
+    assert rows[40][0] > rows[10][0], \
+        f"decode must gain from the larger EP cluster: {rows}"
+    assert rows[10][1] > rows[40][1], \
+        f"prefill must prefer the smaller EP cluster: {rows}"
+
+
+def test_sweep_handles_prefill_only_and_disaggregated_jobs():
+    """Colocated sweep points must be genuinely colocated (no phantom
+    KV handoff even when sweeping a disaggregated job), and a
+    prefill-only job must sweep without a decode phase to resize."""
+    sc = Scenario(TINY).prefill(batch=4, seq=64)
+    pts = sc.generation(out_tokens=1).sweep(4, TPU_V5E, max_pp=1)
+    assert pts and all(p.out_tokens == 1 for p in pts)
+    dj = sc.generation(out_tokens=9).disaggregate(
+        prefill_pool=dict(tp=2), decode_pool=dict(dp=2), kv_transfer=1e9)
+    for p in dj.sweep(4, TPU_V5E, max_pp=1):
+        assert not p.result.disaggregated
+        assert p.result.kv_transfer_time == 0.0
+    # out_tokens=1 in a swept range degrades to prefill-only, not a crash
+    mixed = sc.generation(out_tokens=9).sweep(
+        4, TPU_V5E, out_tokens=(1, 9), max_pp=1)
+    assert {p.out_tokens for p in mixed} == {1, 9}
+    assert all(p.result.tpot == 0.0 for p in mixed if p.out_tokens == 1)
+
+
+def test_step_sims_respect_algorithm_overrides():
+    """step_first/step_last must be computed under the same collective
+    algorithms as the phase total: a 1-step decode phase's time equals
+    its step_last even with a forced AllReduce algorithm."""
+    from repro import H100_HGX_POD
+    job = (Scenario(TINY).prefill(batch=BATCH, seq=KV0)
+           .parallel(dp=2, tp=2).with_algorithm("AllReduce", "tree")
+           .generation(out_tokens=2))
+    res = job.evaluate(H100_HGX_POD)
+    dec = next(p for p in res.phases if p.mode == "decode")
+    assert dec.time == dec.step_last == dec.step_first
+
+
+def test_local_kv_bytes_account_for_pipeline_stages():
+    """A pp rank holds only its own layers' caches: per-rank KV shard
+    must shrink with pp (even layer split), never equal the global."""
+    flat = Scenario(TINY).decode(batch=BATCH, kv_len=KV0).parallel(tp=2)
+    piped = flat.parallel(tp=2, pp=2)
+    s_flat, s_pp = _series(TINY, flat), _series(TINY, piped)
+    assert s_pp.kv_bytes(0) == s_flat.kv_bytes(0)          # global invariant
+    assert s_pp.kv_bytes(0, local=True) == \
+        s_flat.kv_bytes(0, local=True) / 2
+    env = bind_env(TINY, batch=BATCH, seq=1, kv_len=KV0, mode="decode")
+    g = build_graph(TINY, mode="decode").graph
+    distribute(g, piped.cfg, env)
+    assert kv_cache_bytes(g, piped.cfg, env, local=True) == \
+        kv_cache_bytes(g, piped.cfg, env) / 2
+
+
+def test_decode_phase_requires_kv_growth_consistency():
+    sc = Scenario(TINY).prefill(batch=4, seq=64)
+    with pytest.raises(ValueError, match="kv_growth"):
+        sc.phase(kv_growth=1)                 # prefill can't grow KV
+    with pytest.raises(ValueError, match="out_tokens"):
+        sc.generation(out_tokens=0)
+    with pytest.raises(ValueError, match="serving prompt shape"):
+        Scenario(TINY).train(batch=4, seq=64).generation(out_tokens=8)
