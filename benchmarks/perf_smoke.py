@@ -17,6 +17,10 @@ runner of any speed catches >2x regressions in either fast path:
   hot path.
 * **export** — per-rank Chakra stamping with the pre-serialized splice
   path vs the naive per-rank ``json.dump`` re-serialization it replaced.
+* **verify** — static trace verification as a fraction of export
+  wall-time: a cold 32-rank export (materialization + stamping) then
+  ``check_trace_dir`` over the directory; the verifier must stay a
+  cheap add-on (< ``MAX_VERIFY_RATIO`` of the export it audits).
 * **generation** — the phase-program path: a 512-token batched
   generation evaluated in closed form (one decode lowering + O(1)
   samples) vs naive per-step evaluation (one full engine evaluation per
@@ -46,6 +50,8 @@ MIN_SWEEP_RATIO = 3.0
 MIN_SCHED_RATIO = 2.0
 MIN_TOPO_RATIO = 2.0
 MIN_EXPORT_RATIO = 2.0
+MAX_VERIFY_RATIO = 0.10      # ISSUE 6 acceptance: verification of a
+                             # 32-rank export adds < 10% to export time
 MIN_GEN_RATIO = 10.0         # ISSUE 5 acceptance: closed-form decode
 OUT_TOKENS = 512             # >= 10x naive per-step at 512 output tokens
 NAIVE_STEPS = 12             # naive subset actually timed (then scaled)
@@ -78,6 +84,12 @@ def _topo_study(sc):
         WORLD, placements=[("tp", "dp", "cp", "pp"),
                            ("dp", "tp", "cp", "pp")])
     return len(res)
+
+
+def _timed(fn, *args):
+    t0 = time.time()
+    fn(*args)
+    return time.time() - t0
 
 
 def _naive_export(w, out_dir, ranks):
@@ -191,6 +203,32 @@ def run(report):
         f"pre-serialized export only {export_ratio:.1f}x vs naive " \
         f"(floor {MIN_EXPORT_RATIO}x) — stamping regression"
 
+    # ---- static verification as a fraction of export wall-time ------------
+    from repro.analysis import check_trace_dir
+
+    # a distinct spec so nothing in the graph/program cache is warm: the
+    # export time below is the real cold cost (materialize + stamp 32
+    # ranks), the denominator the acceptance ratio is defined against
+    vspec = ModelSpec(name="perf-smoke-verify", n_layers=6, d_model=320,
+                      n_heads=8, n_kv_heads=4, d_ff=768, vocab=4096)
+    vtr = Scenario(vspec).train(batch=12, seq=96).parallel(
+        dp=4, tp=4, pp=2, microbatches=2).trace()
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.time()
+        vtr.export_chakra(d, ranks=range(32))
+        t_vexp = time.time() - t0
+        vrep = check_trace_dir(d)
+        t_ver = min(_timed(check_trace_dir, d) for _ in range(3))
+    assert vrep.ok and not vrep.diagnostics, vrep.render()
+    verify_ratio = t_ver / t_vexp
+    report("perf_smoke/verify", t_ver * 1e6,
+           f"32-rank check_trace_dir {t_ver * 1e3:.1f}ms vs export "
+           f"{t_vexp * 1e3:.1f}ms = {verify_ratio:.2f} of export")
+    assert verify_ratio <= MAX_VERIFY_RATIO, \
+        f"trace verification costs {verify_ratio:.2f} of export wall-time " \
+        f"(ceiling {MAX_VERIFY_RATIO}) — the verifier must stay a static " \
+        f"pass; check for accidental evaluation/simulation in analysis"
+
     return {
         "sweep": {"points": n_cmp,
                   "compiled_s": round(t_cmp, 3), "sympy_s": round(t_sym, 3),
@@ -213,6 +251,10 @@ def run(report):
                    "stamp_ranks_per_sec": round(len(ranks) / t_stamp, 1),
                    "naive_ranks_per_sec": round(len(ranks) / t_naive, 1),
                    "speedup": round(export_ratio, 2)},
+        "verify": {"ranks": 32,
+                   "verify_s": round(t_ver, 4),
+                   "export_s": round(t_vexp, 4),
+                   "ratio_of_export": round(verify_ratio, 3)},
         "generation": {"out_tokens": OUT_TOKENS,
                        "closed_s": round(t_gen_closed, 3),
                        "naive_s": round(t_gen_naive, 3),

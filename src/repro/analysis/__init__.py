@@ -1,0 +1,57 @@
+"""Static analysis for STAGE artifacts (graphs, workloads, schedules,
+Chakra exports).
+
+Four pass families, each a pure traversal (no sympy evaluation, no
+simulation), reported through one diagnostics framework:
+
+* :func:`lint_graph` / :func:`check_guards` — symbolic-graph lint
+  (``STG0xx``): dangling tensors, dead ops, cycles, unbound symbols,
+  einsum dim consistency, divisibility-guard contradictions.
+* :func:`check_comm` — distributed comm checks (``STG1xx``): Send/Recv
+  pairing, collective-group consistency, volume-conservation
+  invariants.
+* :func:`check_schedule` / :func:`check_workload_schedule` — slot-
+  timeline checks (``STG2xx``): coverage, bwd_in/bwd_w ordering,
+  deadlock-freedom.
+* :func:`check_trace` / :func:`check_trace_dir` — Chakra trace
+  validation (``STG3xx``): id uniqueness, dep resolution, DAG
+  acyclicity, microbatch expansion, kv-transfer matching, SPMD rank
+  agreement, manifest audit.
+
+High-level entry points: :meth:`repro.api.Trace.verify`,
+:meth:`repro.api.Job.verify`, ``python -m repro.analysis <trace_dir>``.
+"""
+from .comm_checks import check_comm
+from .diagnostics import (Diagnostic, RULES, Report, SEVERITIES, rule)
+from .graph_lint import check_guards, lint_graph
+from .schedule_checks import check_schedule, check_workload_schedule
+from .trace_checks import check_trace, check_trace_dir
+
+__all__ = [
+    "Diagnostic", "Report", "RULES", "SEVERITIES", "rule",
+    "lint_graph", "check_guards", "check_comm",
+    "check_schedule", "check_workload_schedule",
+    "check_trace", "check_trace_dir",
+    "verify_workload", "verify_graph",
+]
+
+
+def verify_workload(w, *, graph=None, env=None, name: str = "") -> Report:
+    """All in-memory pass families for one instantiated workload: comm
+    checks, schedule checks, and — when its symbolic ``graph`` is
+    available — graph lint."""
+    rep = Report(name=name or w.name)
+    if graph is not None:
+        rep.extend(lint_graph(graph, env))
+    rep.extend(check_comm(w))
+    rep.extend(check_workload_schedule(w))
+    return rep
+
+
+def verify_graph(graph, env=None, *, guards=None, cfg=None,
+                 name: str = "graph") -> Report:
+    """Graph lint plus (optionally) guard-contradiction checks."""
+    rep = lint_graph(graph, env, name=name)
+    if guards is not None and cfg is not None:
+        rep.extend(check_guards(guards, cfg))
+    return rep

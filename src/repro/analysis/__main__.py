@@ -1,0 +1,69 @@
+"""CLI: verify offline Chakra trace dirs or the bundled arch configs.
+
+    python -m repro.analysis <trace_dir> [...]    # exported trace dirs
+    python -m repro.analysis --configs            # lint every bundled arch
+
+Exit status 1 when any error-severity diagnostic is found (warnings do
+not fail the run; add ``--strict`` to make them fatal).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import check_trace_dir
+
+
+def _verify_dirs(dirs: list[str], strict: bool) -> int:
+    bad = 0
+    for d in dirs:
+        rep = check_trace_dir(d)
+        print(rep.render())
+        if not rep.ok or (strict and rep.warnings):
+            bad += 1
+    return 1 if bad else 0
+
+
+def _verify_configs(strict: bool) -> int:
+    """Lint every bundled arch (smoke-scale spec): train and decode
+    workloads under a pipelined config, through all four in-memory pass
+    families — the CI ``lint`` job's analyzer half."""
+    from repro.api import Scenario
+    from repro.configs import ARCHS, get
+
+    bad = 0
+    for name in ARCHS:
+        spec = get(name).smoke
+        for mode_label, sc in (
+                ("train", Scenario(spec).train(batch=4, seq=32)),
+                ("decode", Scenario(spec).decode(batch=4, kv_len=64))):
+            tr = sc.parallel(dp=2, pp=2, microbatches=2).trace()
+            rep = tr.verify(include_graph=True)
+            rep.name = f"{name}/{mode_label}"
+            print(rep.render())
+            if not rep.ok or (strict and rep.warnings):
+                bad += 1
+    return 1 if bad else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static verifier for STAGE trace dirs and configs")
+    ap.add_argument("trace_dirs", nargs="*",
+                    help="export_ranks/export_job output directories")
+    ap.add_argument("--configs", action="store_true",
+                    help="verify every bundled arch config instead of "
+                         "trace dirs")
+    ap.add_argument("--strict", action="store_true",
+                    help="treat warnings as fatal")
+    args = ap.parse_args(argv)
+    if args.configs:
+        return _verify_configs(args.strict)
+    if not args.trace_dirs:
+        ap.error("give at least one trace dir (or --configs)")
+    return _verify_dirs(args.trace_dirs, args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

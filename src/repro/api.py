@@ -725,7 +725,8 @@ class Trace:
                       ranks: Optional[Iterable[int]] = None, *,
                       decompose_alltoall: bool = False,
                       expand_microbatches: bool = False,
-                      topology: Optional[ClusterTopology] = None) -> int:
+                      topology: Optional[ClusterTopology] = None,
+                      on_stale: str = "error") -> int:
         """Write per-rank Chakra-schema JSON traces; returns file count.
 
         ``expand_microbatches`` unrolls the configured pipeline schedule
@@ -735,11 +736,14 @@ class Trace:
         :meth:`Scenario.cluster`), comm nodes carry ``algorithm`` /
         ``tier`` / ``pg_stride`` attrs describing the fabric span their
         group crosses — pass ``topology=hw.topology`` to stamp with the
-        same fabric a topology-carrying profile simulated on."""
+        same fabric a topology-carrying profile simulated on.
+        ``on_stale`` governs leftover rank files from a previous export
+        into the same directory (error | clean | ignore)."""
         return export_ranks(self.workload, out_dir, ranks,
                             decompose_alltoall=decompose_alltoall,
                             expand_microbatches=expand_microbatches,
-                            comm_model=self._comm_model(topology))
+                            comm_model=self._comm_model(topology),
+                            on_stale=on_stale)
 
     def chakra_stage(self, stage: int = 0, *,
                      decompose_alltoall: bool = False,
@@ -749,6 +753,37 @@ class Trace:
                             decompose_alltoall=decompose_alltoall,
                             expand_microbatches=expand_microbatches,
                             comm_model=self._comm_model(topology))
+
+    # ---- static verification --------------------------------------------
+    def verify(self, *, include_graph: Optional[bool] = None,
+               chakra: bool = False) -> "Report":
+        """Static-analysis report over this trace's artifacts
+        (:mod:`repro.analysis`): comm checks + schedule checks over the
+        instantiated workload, graph lint over the distributed symbolic
+        graph, and (``chakra=True``) Chakra validation of every stage
+        body as it would be exported.
+
+        ``include_graph=None`` (default) lints the symbolic graph only
+        when it is already materialized — forcing ``.graph`` on a
+        compiled-backend trace would run the sympy distribute pass this
+        backend exists to avoid; pass ``include_graph=True`` to force
+        it.  The pass suite is pure traversal, far below export cost
+        (guarded in ``benchmarks/perf_smoke.py``)."""
+        from .analysis import (check_comm, check_trace,
+                               check_workload_schedule, lint_graph)
+        from .analysis.diagnostics import Report
+        w = self.workload
+        rep = Report(name=self.scenario.describe())
+        if include_graph or (include_graph is None
+                             and self._graph is not None):
+            rep.extend(lint_graph(self.graph, self.env))
+        rep.extend(check_comm(w))
+        rep.extend(check_workload_schedule(w))
+        if chakra:
+            for s in range(w.stages):
+                rep.extend(check_trace(self.chakra_stage(s), rank=None,
+                                       name=f"stage{s}"))
+        return rep
 
     # ---- one-line report (launch pre-flight) ----------------------------
     def summary(self, hw: HardwareProfile = TPU_V5E, *,
@@ -1145,13 +1180,16 @@ class Job:
 
     # ---- export ---------------------------------------------------------
     def export_chakra(self, out_dir: str,
-                      ranks: Optional[Iterable[int]] = None) -> int:
+                      ranks: Optional[Iterable[int]] = None, *,
+                      on_stale: str = "error") -> int:
         """Write the whole multi-phase timeline as per-rank Chakra JSON:
         phase bodies chained by phase-boundary control deps, decode
         phases stamped with their KV span (``kv_start``/``kv_end``/
         ``steps``), and — for disaggregated jobs — kv-transfer
         Send/Recv comm nodes between the pools (see
-        :func:`repro.core.chakra.export_job`)."""
+        :func:`repro.core.chakra.export_job`).  ``on_stale`` governs
+        leftover rank files from a previous export (error | clean |
+        ignore)."""
         from .core.chakra import export_job
         items = []
         kv_bytes = 0.0
@@ -1172,7 +1210,36 @@ class Job:
             items.append(w)
         return export_job(items, out_dir, ranks=ranks,
                           kv_transfer_bytes=kv_bytes
-                          if self.disaggregated else 0.0)
+                          if self.disaggregated else 0.0,
+                          on_stale=on_stale)
+
+    # ---- static verification --------------------------------------------
+    def verify(self, *, deep: bool = True) -> "Report":
+        """Static-analysis report over the whole phase program
+        (:mod:`repro.analysis`): every phase's workload passes the comm
+        + schedule checks, and with ``deep=True`` (default) the job is
+        additionally exported to a temporary directory and its per-rank
+        Chakra traces validated — including kv-transfer send/recv
+        matching across disaggregated pools and SPMD rank agreement."""
+        import tempfile
+
+        from .analysis import check_trace_dir, verify_workload
+        from .analysis.diagnostics import Report
+        rep = Report(name=self.describe())
+        for ph in self.phases:
+            sc = ph.scenario
+            if ph.kv_growth:
+                series = _series_for(sc, ph.steps)
+                w = series.step_workload(
+                    0, name=f"{sc.spec.name}/{ph.name or sc.mode}")
+                rep.extend(verify_workload(w))
+            else:
+                rep.extend(sc.trace().verify())
+        if deep:
+            with tempfile.TemporaryDirectory() as d:
+                self.export_chakra(d)
+                rep.extend(check_trace_dir(d, name="export"))
+        return rep
 
 
 def _series_for(sc: Scenario, steps: int) -> DecodeSeries:

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 from typing import Iterable, Optional
 
 from typing import TYPE_CHECKING
@@ -196,11 +197,50 @@ def _offset_ids(nodes: list[dict], base: int) -> list[dict]:
     return out
 
 
+_STALE_RE = re.compile(r"^rank\d+\.json$")
+
+
+def _prepare_out_dir(out_dir: str, new_files: Iterable[str],
+                     on_stale: str) -> None:
+    """Create ``out_dir`` and deal with rank files a previous export left
+    behind that this export will NOT overwrite (a re-export at smaller
+    world silently mixes two trace sets otherwise).  ``on_stale`` is
+    ``"error"`` (default — refuse), ``"clean"`` (delete them) or
+    ``"ignore"`` (leave them; the verifier's manifest audit will flag
+    them as ``STG308``)."""
+    if on_stale not in ("error", "clean", "ignore"):
+        raise ValueError(f"on_stale {on_stale!r} not in error|clean|ignore")
+    os.makedirs(out_dir, exist_ok=True)
+    keep = set(new_files)
+    stale = [fn for fn in sorted(os.listdir(out_dir))
+             if _STALE_RE.match(fn) and fn not in keep]
+    if not stale:
+        return
+    if on_stale == "error":
+        raise ValueError(
+            f"{out_dir!r} holds {len(stale)} rank file(s) from a previous "
+            f"export that this one will not overwrite (e.g. {stale[0]!r}); "
+            f"pass on_stale='clean' to delete them, 'ignore' to keep them")
+    if on_stale == "clean":
+        for fn in stale:
+            os.remove(os.path.join(out_dir, fn))
+
+
+def _write_manifest(out_dir: str, files: Iterable[str], kind: str,
+                    **meta) -> None:
+    """Record exactly which files this export emitted — the verifier's
+    stale-file audit (``STG308``) keys off this list."""
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"schema": "Chakra-json-v0.0.4-manifest", "export": kind,
+                   "files": sorted(files), **meta}, f)
+
+
 def export_job(workloads, out_dir: str, *,
                ranks: Optional[Iterable[int]] = None,
                kv_transfer_bytes: float = 0.0,
                decompose_alltoall: bool = False,
-               comm_model: "CollectiveModel | None" = None) -> int:
+               comm_model: "CollectiveModel | None" = None,
+               on_stale: str = "error") -> int:
     """Stamp a multi-phase *job* timeline as one coherent per-rank trace
     set (the phase-program redesign's export).
 
@@ -225,8 +265,11 @@ def export_job(workloads, out_dir: str, *,
     rank starts with the matching ``COMM_RECV_NODE`` — so the transfer
     is visible to the feeder as real communication, not a gap.  A
     ``job.json`` manifest records the pool layout and phase metadata.
-    Returns the number of rank files written."""
-    os.makedirs(out_dir, exist_ok=True)
+    Returns the number of rank files written.
+
+    The emitted file set is recorded in ``manifest.json``; leftover rank
+    files from a previous export into the same directory are handled per
+    ``on_stale`` (see :func:`_prepare_out_dir`)."""
     pools: dict[str, dict] = {}
     order: list[str] = []
     metas = []
@@ -272,6 +315,9 @@ def export_job(workloads, out_dir: str, *,
 
     count = 0
     rank_list = list(ranks) if ranks is not None else list(range(total_world))
+    emitted = [f"rank{r}.json" for r in rank_list] + ["job.json",
+                                                      "manifest.json"]
+    _prepare_out_dir(out_dir, emitted, on_stale)
     for rank in rank_list:
         if not 0 <= rank < total_world:
             raise ValueError(f"rank {rank} out of range for job world "
@@ -331,6 +377,7 @@ def export_job(workloads, out_dir: str, *,
                    "pools": pools, "world": total_world,
                    "kv_transfer_bytes": kv_transfer_bytes,
                    "phases": metas}, f)
+    _write_manifest(out_dir, emitted, "job", world=total_world)
     return count
 
 
@@ -373,16 +420,23 @@ def rank_coords(rank: int, cfg) -> dict:
 def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = None,
                  *, decompose_alltoall: bool = False,
                  expand_microbatches: bool = False,
-                 comm_model: "CollectiveModel | None" = None) -> int:
+                 comm_model: "CollectiveModel | None" = None,
+                 on_stale: str = "error") -> int:
     """Stamp per-rank Chakra JSON files (rank -> its stage's trace).
 
     Each stage's node array is serialized exactly ONCE; per rank only the
     small ``rank``/``coords`` tail is formatted and spliced onto the
     pre-serialized body, so writing 32K rank files is dominated by file
-    I/O rather than 32K re-serializations of the same node list."""
-    os.makedirs(out_dir, exist_ok=True)
+    I/O rather than 32K re-serializations of the same node list.
+
+    The emitted file set is recorded in ``manifest.json``; leftover rank
+    files from a previous export into the same directory are handled per
+    ``on_stale`` (see :func:`_prepare_out_dir`)."""
     cfg = w.cfg
     world = cfg.world
+    rank_list = list(ranks) if ranks is not None else list(range(world))
+    emitted = [f"rank{r}.json" for r in rank_list] + ["manifest.json"]
+    _prepare_out_dir(out_dir, emitted, on_stale)
     # pre-serialized stage bodies, open at the tail: '{... "nodes": [...]'
     stage_body = {
         s: json.dumps(export_stage(
@@ -391,7 +445,7 @@ def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = Non
             comm_model=comm_model))[:-1]
         for s in range(w.stages)}
     count = 0
-    for rank in (ranks if ranks is not None else range(world)):
+    for rank in rank_list:
         coords = rank_coords(rank, cfg)
         stage = coords["pp"]
         if stage >= w.stages:
@@ -403,4 +457,6 @@ def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = Non
             f.write(stage_body[stage])
             f.write(f', "rank": {rank}, "coords": {json.dumps(coords)}}}')
         count += 1
+    _write_manifest(out_dir, emitted, "ranks", world=world,
+                    workload=w.name)
     return count

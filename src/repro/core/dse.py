@@ -74,15 +74,41 @@ class DSEPoint:
 
 @dataclass
 class SkippedConfig:
-    """A config the sweep could not realize, with the reason why."""
+    """A config the sweep could not realize, with the reason why.
+
+    ``prefiltered`` marks configs rejected by the cheap pre-dispatch
+    feasibility check (microbatch divisibility, schedule constraints)
+    rather than by the pipeline itself; ``diagnostics`` carries
+    structured :class:`repro.analysis.Diagnostic` records when the sweep
+    ran with ``verify=True``."""
     cfg: ParallelCfg
     reason: str
+    prefiltered: bool = False
+    diagnostics: list = field(default_factory=list)
+
+
+def _prune_bucket(reason: str) -> str:
+    """Coarse classification of a skip reason for :attr:`SweepResult.pruned`."""
+    low = reason.lower()
+    if "microbatch" in low:
+        return "microbatch_indivisible"
+    if "interleaved" in low or "vstage" in low:
+        return "schedule_constraint"
+    if "world" in low:
+        return "world_mismatch"
+    if "divis" in low or "divide" in low:
+        return "divisibility"
+    return "other"
 
 
 class SweepResult(list):
     """Feasible :class:`DSEPoint` list (sorted by step time) plus the
     configs that were skipped as infeasible.  Subclasses ``list`` so all
-    pre-existing ``sweep(...)[0]`` / iteration call sites keep working."""
+    pre-existing ``sweep(...)[0]`` / iteration call sites keep working.
+
+    ``pruned`` tallies the skipped configs by coarse reason bucket
+    (e.g. ``microbatch_indivisible``) so sweep summaries can say *why*
+    the feasible set shrank, not just that it did."""
 
     def __init__(self, points=(), skipped=(), backend: str = "compiled"):
         super().__init__(points)
@@ -92,6 +118,22 @@ class SweepResult(list):
     @property
     def points(self) -> list[DSEPoint]:
         return list(self)
+
+    @property
+    def pruned(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for s in self.skipped:
+            b = _prune_bucket(s.reason)
+            out[b] = out.get(b, 0) + 1
+        return out
+
+    def summary(self) -> str:
+        bits = [f"{len(self)} feasible point(s)"]
+        if self.skipped:
+            pruned = ", ".join(f"{k}={v}"
+                               for k, v in sorted(self.pruned.items()))
+            bits.append(f"{len(self.skipped)} skipped ({pruned})")
+        return "; ".join(bits)
 
 
 @dataclass
@@ -125,7 +167,9 @@ def enumerate_pool_splits(world: int) -> list[tuple[int, int]]:
     remainder) — the Table IX observation is that the two phases prefer
     different cluster sizes, so the split is a genuine DSE dimension."""
     if world < 2:
-        raise ValueError(f"pool splits need world >= 2, got {world}")
+        raise InfeasibleConfigError(
+            f"disaggregated serving needs world >= 2 devices (one per "
+            f"pool), got world={world}; run colocated or grow the cluster")
     splits = []
     p = 1
     while p < world:
@@ -248,6 +292,22 @@ def evaluate_point_compiled(engine: CompiledBackend, cfg: ParallelCfg,
     return DSEPoint(cfg=cfg, sim=sim, mem=mem, label=cfg.describe())
 
 
+def _skip(cfg: ParallelCfg, exc: BaseException, *, prefiltered: bool = False,
+          verify: bool = False) -> SkippedConfig:
+    """Record one infeasible config; with ``verify`` attach a structured
+    :class:`repro.analysis.Diagnostic` (code ``STG007``) so downstream
+    tooling can filter skips by rule instead of parsing reason strings."""
+    sk = SkippedConfig(cfg, f"{type(exc).__name__}: {exc}",
+                       prefiltered=prefiltered)
+    if verify:
+        from ..analysis.diagnostics import INFEASIBLE_CONFIG, Report
+        rep = Report()
+        rep.add(INFEASIBLE_CONFIG, str(exc), node=cfg.describe(),
+                fixit="adjust microbatches / schedule to fit the workload")
+        sk.diagnostics = rep.diagnostics
+    return sk
+
+
 def evaluate_or_skip(cfg: ParallelCfg, *, env: Env, hw: HardwareProfile,
                      n_layers: int, name: str,
                      engine: Optional[CompiledBackend] = None,
@@ -255,7 +315,8 @@ def evaluate_or_skip(cfg: ParallelCfg, *, env: Env, hw: HardwareProfile,
                      recompute: bool = False,
                      mem_limit_gb: Optional[float] = None,
                      reuse: bool = False,
-                     algorithms: Optional[dict] = None):
+                     algorithms: Optional[dict] = None,
+                     verify: bool = False):
     """One sweep point, shared by every execution mode (serial, thread
     chunks, process chunks): returns a :class:`DSEPoint` (OOM-labelled
     when over ``mem_limit_gb``) or a :class:`SkippedConfig` when the
@@ -277,7 +338,7 @@ def evaluate_or_skip(cfg: ParallelCfg, *, env: Env, hw: HardwareProfile,
                                 recompute=recompute, name=name,
                                 algorithms=algorithms)
     except InfeasibleConfigError as e:
-        return SkippedConfig(cfg, f"{type(e).__name__}: {e}")
+        return _skip(cfg, e, verify=verify)
     if mem_limit_gb is not None and pt.peak_gb > mem_limit_gb:
         pt.label += " (OOM)"
     return pt
@@ -290,6 +351,7 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
           backend: str = "compiled", engine: Optional[CompiledBackend] = None,
           workers: int = 0, chunk_size: int = 16,
           algorithms: Optional[dict] = None,
+          verify: bool = False,
           **enum_kw) -> SweepResult:
     """Evaluate every enumerated strategy; see module docstring.
 
@@ -297,12 +359,33 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
     are identical and identically ordered to the serial run); ``engine``
     lets callers share a pre-warmed :class:`CompiledBackend` across
     sweeps (what :meth:`repro.api.Scenario.sweep` does).
+
+    Configs that fail the cheap workload-shape feasibility check are
+    pruned *before* dispatch (never hitting the executor) and recorded
+    on ``SweepResult.skipped`` with ``prefiltered=True``;
+    ``SweepResult.pruned`` tallies why.  ``verify=True`` additionally
+    attaches structured :class:`repro.analysis.Diagnostic` records to
+    every skipped config.
     """
     if backend not in ("compiled", "sympy"):
         raise ValueError(f"backend {backend!r} not in compiled|sympy")
     cfgs = list(enumerate_configs(world, **enum_kw))
     if backend == "compiled" and engine is None:
         engine = CompiledBackend(build, env, n_layers=n_layers)
+
+    # cheap pre-dispatch feasibility pass: infeasible factorizations are
+    # counted and skipped-with-reason without consuming executor slots
+    batch = env.get(sym("B"))
+    prefiltered, feasible = [], []
+    for cfg in cfgs:
+        try:
+            cfg.validate_workload(batch=batch)
+        except InfeasibleConfigError as e:
+            prefiltered.append(_skip(cfg, e, prefiltered=True,
+                                     verify=verify))
+        else:
+            feasible.append(cfg)
+    cfgs = feasible
 
     serial = not (workers and workers > 1)
 
@@ -311,7 +394,7 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
             cfg, env=env, hw=hw, n_layers=n_layers, name=name,
             engine=engine, build=None if backend == "compiled" else build,
             recompute=recompute, mem_limit_gb=mem_limit_gb, reuse=serial,
-            algorithms=algorithms)
+            algorithms=algorithms, verify=verify)
 
     if workers and workers > 1 and len(cfgs) > 1:
         chunks = [cfgs[i:i + chunk_size]
@@ -325,6 +408,7 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
         results = [eval_one(cfg) for cfg in cfgs]
 
     points = [r for r in results if isinstance(r, DSEPoint)]
-    skipped = [r for r in results if isinstance(r, SkippedConfig)]
+    skipped = prefiltered + [r for r in results
+                             if isinstance(r, SkippedConfig)]
     points.sort(key=lambda p: p.sim.step_time)
     return SweepResult(points, skipped, backend=backend)

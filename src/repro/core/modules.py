@@ -95,8 +95,11 @@ def attention_gqa(b: GraphBuilder, x: STensor, layer: int, *,
             # self-attn decode still projects the new token's k/v (cache append)
             w_k = _w(b, f"{prefix}w_k{layer}", (H, NKV, DH), {1: "kv_heads", 2: "tp_col"})
             w_v = _w(b, f"{prefix}w_v{layer}", (H, NKV, DH), {1: "kv_heads", 2: "tp_col"})
-            b.einsum(f"{prefix}knew{layer}", "bsh,hnd->bsnd", [h, w_k], tags=tags)
-            b.einsum(f"{prefix}vnew{layer}", "bsh,hnd->bsnd", [h, w_v], tags=tags)
+            # output is a cache write (side effect), not a dataflow edge
+            b.einsum(f"{prefix}knew{layer}", "bsh,hnd->bsnd", [h, w_k],
+                     tags={**tags, "sink": "kv_cache"})
+            b.einsum(f"{prefix}vnew{layer}", "bsh,hnd->bsnd", [h, w_v],
+                     tags={**tags, "sink": "kv_cache"})
     else:
         w_k = _w(b, f"{prefix}w_k{layer}", (H, NKV, DH), {1: "kv_heads", 2: "tp_col"})
         w_v = _w(b, f"{prefix}w_v{layer}", (H, NKV, DH), {1: "kv_heads", 2: "tp_col"})
@@ -189,7 +192,8 @@ def attention_mla(b: GraphBuilder, x: STensor, layer: int, *,
         ckv = b.input(f"{prefix}ckv_cache{layer}", (B, kv_len, R))
         kr = b.input(f"{prefix}kr_cache{layer}", (B, kv_len, DR))
         w_dkv = _w(b, f"{prefix}w_dkv{layer}", (H, R))
-        b.einsum(f"{prefix}ckv_new{layer}", "bsh,hr->bsr", [h, w_dkv], tags=tags)
+        b.einsum(f"{prefix}ckv_new{layer}", "bsh,hr->bsr", [h, w_dkv],
+                 tags={**tags, "sink": "kv_cache"})
     else:
         w_dkv = _w(b, f"{prefix}w_dkv{layer}", (H, R))
         ckv = b.einsum(f"{prefix}ckv{layer}", "bth,hr->btr", [h, w_dkv], tags=tags)

@@ -1,0 +1,496 @@
+"""Static-analysis subsystem tests (ISSUE 6): diagnostics framework,
+seeded-fault detection across all four pass families, guard matching
+and structure-class splits, DSE pruning, manifest/stale handling, and
+the bundled-arch clean matrix."""
+import dataclasses
+import json
+import os
+import shutil
+
+import pytest
+
+from repro import ModelSpec, ParallelCfg, Scenario, TPU_V5E
+from repro.analysis import (RULES, Report, check_guards, check_schedule,
+                            check_trace_dir, lint_graph)
+from repro.analysis.diagnostics import ERROR, INFO, SEVERITIES
+from repro.configs import ARCHS, get
+from repro.core.assemble import total_layers
+from repro.core.compiled import CompiledBackend
+from repro.core.dse import enumerate_pool_splits
+from repro.core.matcher import InfeasibleConfigError
+from repro.core.schedules import build_schedule
+from repro.core.stg import Einsum
+from repro.core.symbolic import Env
+from repro.core.distribute import guards_match
+
+SPEC = ModelSpec(name="tiny-verify", n_layers=2, d_model=64, n_heads=4,
+                 n_kv_heads=2, d_ff=128, vocab=256)
+
+
+def _scenario():
+    return Scenario(SPEC).train(batch=8, seq=32)
+
+
+@pytest.fixture(scope="module")
+def clean_dir(tmp_path_factory):
+    """One clean expanded pp=2 export shared by every fault test."""
+    d = str(tmp_path_factory.mktemp("clean"))
+    tr = _scenario().parallel(dp=2, pp=2, microbatches=2).trace()
+    tr.export_chakra(d, expand_microbatches=True)
+    return d
+
+
+def _mutated(clean_dir, tmp_path, fn, fname="rank1.json"):
+    """Copy the clean export and apply ``fn`` to one rank's trace dict."""
+    d = str(tmp_path)
+    for f in os.listdir(clean_dir):
+        shutil.copy(os.path.join(clean_dir, f), d)
+    fp = os.path.join(d, fname)
+    with open(fp) as f:
+        t = json.load(f)
+    fn(t)
+    with open(fp, "w") as f:
+        json.dump(t, f)
+    return check_trace_dir(d)
+
+
+# --------------------------------------------------------------------------
+# diagnostics framework
+# --------------------------------------------------------------------------
+
+def test_rule_registry_is_consistent():
+    assert len(RULES) >= 20
+    for code, r in RULES.items():
+        assert r.code == code and code.startswith("STG")
+        assert r.severity in SEVERITIES
+
+
+def test_report_rejects_unregistered_code():
+    with pytest.raises(KeyError):
+        Report().add("STG999", "no such rule")
+
+
+def test_report_queries_and_render():
+    rep = Report(name="unit")
+    assert rep.ok and "OK" in rep.render()
+    rep.add("STG007", "just info")
+    assert rep.ok and rep.codes() == {"STG007"}      # infos never fail
+    d = rep.add("STG301", "dup", node=7, rank=3, fixit="renumber")
+    assert not rep.ok and d.severity == ERROR
+    text = rep.render()
+    assert "STG301" in text and "rank3" in text and "renumber" in text
+    with pytest.raises(AssertionError):
+        rep.raise_if_errors()
+
+
+def test_report_extend_merges():
+    a, b = Report(), Report()
+    a.tally("x", 2)
+    b.add("STG301", "dup")
+    b.tally("x", 3)
+    a.extend(b)
+    assert a.checked["x"] == 5 and not a.ok
+
+
+# --------------------------------------------------------------------------
+# graph lint (STG0xx) on seeded faults
+# --------------------------------------------------------------------------
+
+def _graph():
+    return _scenario().builder().clone().graph
+
+
+def test_lint_clean_graph():
+    rep = lint_graph(_graph(), _scenario().env())
+    assert rep.ok and not rep.diagnostics
+    assert rep.checked["graph_lint"] > 0
+
+
+def test_dangling_tensor_detected():
+    g = _graph()
+    consumed = {t.uid for op in g.ops for t in op.ins}
+    victim = next(op for op in g.ops
+                  if any(t.uid in consumed for t in op.outs))
+    g.ops.remove(victim)
+    assert "STG001" in lint_graph(g).codes()
+
+
+def test_graph_cycle_detected():
+    g = _graph()
+    prod = {t.uid: op for op in g.ops for t in op.outs}
+    for op in g.ops:
+        srcs = [prod[t.uid] for t in op.ins
+                if t.uid in prod and prod[t.uid] is not op]
+        if srcs:
+            srcs[0].ins.append(op.outs[0])       # producer <-> consumer loop
+            break
+    assert "STG003" in lint_graph(g).codes()
+
+
+def test_unbound_symbol_detected():
+    rep = lint_graph(_graph(), Env())            # nothing bound
+    assert "STG004" in rep.codes()
+
+
+def test_einsum_dim_mismatch_detected():
+    g = _graph()
+    e = next(op for op in g.ops
+             if isinstance(op, Einsum) and len(op.in_specs) >= 2)
+    e.in_specs = [e.in_specs[0], e.in_specs[0]] + list(e.in_specs[2:])
+    assert "STG005" in lint_graph(g).codes()
+
+
+def test_kv_cache_appends_are_not_dead_code():
+    """Decode-mode cache writes are sink-tagged, not STG002 warnings."""
+    sc = Scenario(SPEC).decode(batch=4, kv_len=64)
+    rep = lint_graph(sc.builder().clone().graph)
+    assert not rep.diagnostics, rep.render()
+
+
+# --------------------------------------------------------------------------
+# guards: contradiction check, matcher behavior, structure-class splits
+# --------------------------------------------------------------------------
+
+def test_check_guards_contradiction():
+    guards = {(12, ("tp",)): True}                # 12 % 8 != 0: recorded lie
+    cfg = ParallelCfg(axes={"tp": 8}, tp_axis="tp")
+    assert not guards_match(guards, cfg)
+    rep = check_guards(guards, cfg)
+    assert rep.codes() == {"STG006"} and not rep.ok
+    ok_cfg = ParallelCfg(axes={"tp": 4}, tp_axis="tp")
+    assert guards_match(guards, ok_cfg)
+    assert check_guards(guards, ok_cfg).ok
+
+
+def test_structure_class_splits_on_guard_flip():
+    """Two configs with the same structure key but a flipped divisibility
+    guard (GQA: 2 kv heads % tp) must compile separate programs, and a
+    repeat lookup must replay the cached one."""
+    sc = _scenario()
+    src = sc.builder()
+    eng = CompiledBackend(lambda: src.clone().graph, sc.env(),
+                          n_layers=total_layers(SPEC))
+    ca = ParallelCfg(axes={"tp": 2}, tp_axis="tp")
+    cb = ParallelCfg(axes={"tp": 4}, tp_axis="tp")
+    assert eng._structure_key(ca) == eng._structure_key(cb)
+    pa, pb = eng.program(ca), eng.program(cb)
+    assert eng.compiles == 2 and pa.guards != pb.guards
+    assert pa.guards[(2, ("tp",))] is True       # kv heads divide tp=2
+    assert pb.guards[(2, ("tp",))] is False      # ... but not tp=4
+    eng.program(ca)
+    assert eng.hits == 1 and eng.compiles == 2
+    # each program's guards are self-consistent for its own config
+    assert check_guards(pa.guards, ca).ok
+    assert check_guards(pb.guards, cb).ok
+    # replaying a's program for b's config is exactly what STG006 flags
+    assert not check_guards(pa.guards, cb).ok
+
+
+def test_decode_series_rejects_guard_flip_in_range():
+    """A KV-dependent guard flipping inside the decode range (cp=2 over
+    kv 32..34) means no single lowered program covers the generation —
+    the series must refuse instead of silently mis-costing."""
+    job = (Scenario(SPEC).prefill(batch=4, seq=32).parallel(cp=2)
+           .generation(out_tokens=4))
+    with pytest.raises(InfeasibleConfigError, match="KV-dependent"):
+        job.evaluate(TPU_V5E)
+
+
+def test_decode_series_guard_stable_control():
+    """Same range without the KV-sharding axis evaluates fine."""
+    job = (Scenario(SPEC).prefill(batch=4, seq=32).parallel(tp=2)
+           .generation(out_tokens=4))
+    res = job.evaluate(TPU_V5E)
+    assert res.tokens_per_s > 0
+
+
+# --------------------------------------------------------------------------
+# schedule checks (STG2xx) on seeded faults
+# --------------------------------------------------------------------------
+
+def _reslot(sched, timelines):
+    return dataclasses.replace(
+        sched, timelines=tuple(tuple(t) for t in timelines))
+
+
+def test_schedule_clean():
+    for name in ("gpipe", "1f1b", "interleaved", "zb-h1"):
+        rep = check_schedule(build_schedule(name, 2, 4, 2))
+        assert rep.ok and not rep.diagnostics, (name, rep.render())
+
+
+def test_schedule_missing_slot():
+    s = build_schedule("1f1b", 2, 4, 1)
+    tl = [list(t) for t in s.timelines]
+    tl[1].pop(3)
+    rep = check_schedule(_reslot(s, tl))
+    assert "STG204" in rep.codes()
+
+
+def test_schedule_deadlock_and_phase_order():
+    # stage0 forwards mb0 only after its backward: the cross-stage event
+    # graph can never make progress
+    s = build_schedule("1f1b", 2, 4, 1)
+    tl = [list(t) for t in s.timelines]
+    f0 = next(x for x in tl[0] if x.kind == "fwd" and x.mb == 0)
+    tl[0].remove(f0)
+    tl[0].append(f0)
+    rep = check_schedule(_reslot(s, tl))
+    assert "STG201" in rep.codes() and "STG202" in rep.codes()
+
+
+def test_schedule_bwd_split_order():
+    z = build_schedule("zb-h1", 2, 4, 1)
+    tl = [list(t) for t in z.timelines]
+    stage = tl[1]
+    i = next(i for i, sl in enumerate(stage) if sl.kind == "bwd_in")
+    ref = stage[i]
+    j = next(k for k, sl in enumerate(stage)
+             if sl.kind == "bwd_w" and sl.mb == ref.mb
+             and sl.vstage == ref.vstage)
+    stage[i], stage[j] = stage[j], stage[i]
+    rep = check_schedule(_reslot(z, tl))
+    assert "STG203" in rep.codes()
+
+
+# --------------------------------------------------------------------------
+# chakra trace checks (STG3xx): the acceptance's seeded corruptions
+# --------------------------------------------------------------------------
+
+def test_clean_export_verifies(clean_dir):
+    rep = check_trace_dir(clean_dir)
+    assert rep.ok and not rep.diagnostics, rep.render()
+    assert rep.checked["trace_files"] == 4
+
+
+def test_dropped_recv(clean_dir, tmp_path):
+    def fault(t):
+        i = next(i for i, n in enumerate(t["nodes"])
+                 if n["type"] == "COMM_RECV_NODE")
+        del t["nodes"][i]
+    rep = _mutated(clean_dir, tmp_path, fault)
+    assert "STG101" in rep.codes()
+
+
+def test_duplicate_node_id(clean_dir, tmp_path):
+    def fault(t):
+        t["nodes"][1]["id"] = t["nodes"][0]["id"]
+    rep = _mutated(clean_dir, tmp_path, fault)
+    assert "STG301" in rep.codes()
+
+
+def test_cyclic_ctrl_dep(clean_dir, tmp_path):
+    def fault(t):
+        t["nodes"][2]["ctrl_deps"] = [t["nodes"][-1]["id"]]
+    rep = _mutated(clean_dir, tmp_path, fault)
+    assert "STG303" in rep.codes()
+
+
+def test_unresolved_dep(clean_dir, tmp_path):
+    def fault(t):
+        t["nodes"][1]["data_deps"] = [99999999]
+    rep = _mutated(clean_dir, tmp_path, fault)
+    assert rep.codes() == {"STG302"}
+
+
+def test_reordered_collective_diverges(clean_dir, tmp_path):
+    """Swapping two distinct collectives on one rank must be caught as
+    SPMD divergence even though the file is internally self-consistent
+    (this also pins the spliced-body dedup to exact byte identity — a
+    sampled key would group the mutant with its clean siblings)."""
+    def fault(t):
+        idx = [i for i, n in enumerate(t["nodes"])
+               if n["type"] == "COMM_COLL_NODE"]
+        i = idx[0]
+        j = next(k for k in idx
+                 if t["nodes"][k]["name"] != t["nodes"][i]["name"])
+        t["nodes"][i], t["nodes"][j] = t["nodes"][j], t["nodes"][i]
+    rep = _mutated(clean_dir, tmp_path, fault)
+    assert rep.codes() == {"STG307"}
+    d = rep.by_code("STG307")[0]
+    assert d.rank == 1
+
+
+def test_microbatch_expansion_inconsistent(clean_dir, tmp_path):
+    def fault(t):
+        i = next(i for i, n in enumerate(t["nodes"])
+                 if n.get("attrs", {}).get("mb") == 1)
+        del t["nodes"][i]
+    rep = _mutated(clean_dir, tmp_path, fault)
+    assert "STG304" in rep.codes()
+
+
+def test_attr_schema_violation(clean_dir, tmp_path):
+    def fault(t):
+        n = next(n for n in t["nodes"] if n["type"] == "COMP_NODE")
+        n["attrs"]["num_ops"] = "not-a-number"
+    rep = _mutated(clean_dir, tmp_path, fault)
+    assert rep.codes() == {"STG306"}
+
+
+def test_stale_file_flagged(clean_dir, tmp_path):
+    d = str(tmp_path)
+    for f in os.listdir(clean_dir):
+        shutil.copy(os.path.join(clean_dir, f), d)
+    shutil.copy(os.path.join(d, "rank0.json"), os.path.join(d, "rank99.json"))
+    rep = check_trace_dir(d)
+    assert rep.codes() == {"STG308"}
+    assert rep.by_code("STG308")[0].rank == 99
+
+
+def test_manifest_missing_file_flagged(clean_dir, tmp_path):
+    d = str(tmp_path)
+    for f in os.listdir(clean_dir):
+        shutil.copy(os.path.join(clean_dir, f), d)
+    os.remove(os.path.join(d, "rank3.json"))
+    rep = check_trace_dir(d)
+    assert "STG308" in rep.codes()
+    assert any("missing" in di.message for di in rep.by_code("STG308"))
+
+
+def test_empty_dir(tmp_path):
+    rep = check_trace_dir(str(tmp_path))
+    assert rep.codes() == {"STG309"}
+
+
+# --------------------------------------------------------------------------
+# disaggregated jobs: kv-transfer matching (STG305)
+# --------------------------------------------------------------------------
+
+def _disagg_job():
+    return (Scenario(SPEC).prefill(batch=4, seq=32).generation(out_tokens=8)
+            .disaggregate(prefill_pool=dict(tp=2), decode_pool=dict(dp=2),
+                          kv_transfer=1e9))
+
+
+def test_disaggregated_job_verifies_clean():
+    rep = _disagg_job().verify()
+    assert rep.ok and not rep.diagnostics, rep.render()
+
+
+def test_orphan_kv_transfer(tmp_path):
+    d = str(tmp_path)
+    _disagg_job().export_chakra(d)
+    assert check_trace_dir(d).ok
+    for fn in sorted(os.listdir(d)):
+        if not fn.startswith("rank"):
+            continue
+        fp = os.path.join(d, fn)
+        with open(fp) as f:
+            t = json.load(f)
+        kv = [i for i, n in enumerate(t["nodes"])
+              if n.get("attrs", {}).get("phase") == "kv_transfer"
+              and n["type"] == "COMM_RECV_NODE"]
+        if kv:
+            del t["nodes"][kv[0]]
+            with open(fp, "w") as f:
+                json.dump(t, f)
+            break
+    else:
+        pytest.fail("no kv-transfer recv found in the exported job")
+    rep = check_trace_dir(d)
+    assert "STG305" in rep.codes()
+
+
+# --------------------------------------------------------------------------
+# export manifest / on_stale semantics (satellite 1)
+# --------------------------------------------------------------------------
+
+def test_manifest_written_and_complete(clean_dir):
+    with open(os.path.join(clean_dir, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["export"] == "ranks" and man["world"] == 4
+    assert set(man["files"]) == {"rank0.json", "rank1.json", "rank2.json",
+                                 "rank3.json", "manifest.json"}
+    for fn in man["files"]:
+        assert os.path.exists(os.path.join(clean_dir, fn))
+
+
+def test_on_stale_error_clean_ignore(tmp_path):
+    d = str(tmp_path)
+    tr = _scenario().parallel(dp=2, pp=2, microbatches=2).trace()
+    tr.export_chakra(d)
+    stale = os.path.join(d, "rank7.json")
+    shutil.copy(os.path.join(d, "rank0.json"), stale)
+    with pytest.raises(ValueError, match="previous export"):
+        tr.export_chakra(d)                          # default: error
+    assert os.path.exists(stale)                     # refused before writing
+    tr.export_chakra(d, on_stale="clean")
+    assert not os.path.exists(stale)
+    shutil.copy(os.path.join(d, "rank0.json"), stale)
+    tr.export_chakra(d, on_stale="ignore")
+    assert os.path.exists(stale)
+    assert "STG308" in check_trace_dir(d).codes()    # verifier's catch
+    with pytest.raises(ValueError, match="on_stale"):
+        tr.export_chakra(d, on_stale="bogus")
+
+
+def test_job_export_on_stale(tmp_path):
+    d = str(tmp_path)
+    job = _disagg_job()
+    job.export_chakra(d)
+    with open(os.path.join(d, "manifest.json")) as f:
+        assert json.load(f)["export"] == "job"
+    stale = os.path.join(d, "rank9.json")
+    shutil.copy(os.path.join(d, "rank0.json"), stale)
+    with pytest.raises(ValueError, match="previous export"):
+        job.export_chakra(d)
+    job.export_chakra(d, on_stale="clean")
+    assert not os.path.exists(stale)
+    assert check_trace_dir(d).ok
+
+
+# --------------------------------------------------------------------------
+# DSE: pool-split error type, prefilter, verify diagnostics (satellite 2)
+# --------------------------------------------------------------------------
+
+def test_enumerate_pool_splits_raises_typed_error():
+    with pytest.raises(InfeasibleConfigError, match="world >= 2"):
+        enumerate_pool_splits(1)
+    assert enumerate_pool_splits(8) == [(1, 7), (2, 6), (4, 4)]
+
+
+def test_sweep_prefilters_infeasible_microbatching():
+    # batch=16, world=4, mb=8: dp=1 (16/8) and dp=2 (8/8) fit; dp=4
+    # leaves a per-rank batch of 4 that 8 cannot cut, so those configs
+    # never reach the evaluator
+    res = Scenario(SPEC).train(batch=16, seq=32).sweep(
+        4, microbatches=8, verify=True)
+    assert len(res) > 0
+    assert res.skipped and all(s.prefiltered for s in res.skipped)
+    assert all(s.diagnostics and s.diagnostics[0].code == "STG007"
+               for s in res.skipped)
+    assert all(d.severity == INFO for s in res.skipped
+               for d in s.diagnostics)
+    pruned = res.pruned
+    assert sum(pruned.values()) == len(res.skipped)
+    assert "feasible" in res.summary() and "skipped" in res.summary()
+
+
+def test_sweep_without_verify_has_no_diagnostics():
+    res = Scenario(SPEC).train(batch=16, seq=32).sweep(4, microbatches=8)
+    assert res.skipped and all(not s.diagnostics for s in res.skipped)
+
+
+# --------------------------------------------------------------------------
+# the clean matrix: every bundled arch x mode x schedule verifies clean
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_bundled_arch_verifies_clean(name):
+    spec = get(name).smoke
+    for sched in ("gpipe", "1f1b", "interleaved", "zb-h1"):
+        for sc in (Scenario(spec).train(batch=4, seq=32),
+                   Scenario(spec).decode(batch=4, kv_len=64)):
+            tr = sc.parallel(dp=2, pp=2, microbatches=2,
+                             schedule=sched).trace()
+            rep = tr.verify(include_graph=True)
+            assert rep.ok and not rep.diagnostics, \
+                f"{name}/{sc.mode}/{sched}: {rep.render()}"
+
+
+def test_trace_verify_chakra_mode():
+    tr = _scenario().parallel(dp=2, pp=2, microbatches=2).trace()
+    rep = tr.verify(chakra=True)
+    assert rep.ok and not rep.diagnostics, rep.render()
+    assert rep.checked.get("trace_nodes", 0) > 0
