@@ -15,6 +15,11 @@ runner of any speed catches >2x regressions in either fast path:
   dp-inner), sympy vs compiled — guards the shared CollectiveModel
   lowering (one record per (coll, axis, group)) staying off the per-node
   hot path.
+* **resilience sweep** — the goodput-scoring add-on: the same compiled
+  sweep with a ``ResilienceSpec`` attached and
+  ``rank_by="effective_goodput"`` vs the plain sweep — the per-point
+  closed-form scoring (failure model + Young-Daly + renewal goodput)
+  must stay a cheap post-pass (< ``MAX_RESILIENCE_RATIO`` x plain).
 * **export** — per-rank Chakra stamping with the pre-serialized splice
   path vs the naive per-rank ``json.dump`` re-serialization it replaced.
 * **verify** — static trace verification as a fraction of export
@@ -50,6 +55,8 @@ MIN_SWEEP_RATIO = 3.0
 MIN_SCHED_RATIO = 2.0
 MIN_TOPO_RATIO = 2.0
 MIN_EXPORT_RATIO = 2.0
+MAX_RESILIENCE_RATIO = 1.5   # ISSUE 7 acceptance: goodput scoring adds
+                             # <= 50% to a compiled sweep's wall-time
 MAX_VERIFY_RATIO = 0.10      # ISSUE 6 acceptance: verification of a
                              # 32-rank export adds < 10% to export time
 MIN_GEN_RATIO = 10.0         # ISSUE 5 acceptance: closed-form decode
@@ -153,6 +160,28 @@ def run(report):
         f"compiled topology sweep only {topo_ratio:.1f}x vs sympy " \
         f"(floor {MIN_TOPO_RATIO}x) — collective-model hot-path regression"
 
+    # ---- resilience scoring as a fraction of plain sweep wall-time --------
+    from repro.ft import ResilienceSpec
+
+    res_sc = sc.cluster(POD)
+    rspec = ResilienceSpec(mtbf={"chip": 50e3}, ckpt="parallel_fs")
+    t0 = time.time()
+    nr_plain = len(res_sc.sweep(WORLD, microbatches=4))
+    tr_plain = time.time() - t0
+    t0 = time.time()
+    nr_res = len(res_sc.resilience(spec=rspec).sweep(
+        WORLD, microbatches=4, rank_by="effective_goodput"))
+    tr_res = time.time() - t0
+    assert nr_plain == nr_res, (nr_plain, nr_res)
+    res_ratio = tr_res / tr_plain
+    report("perf_smoke/resilience_sweep", tr_res * 1e6,
+           f"{nr_res} pts goodput-scored {tr_res * 1e3:.0f}ms vs plain "
+           f"{tr_plain * 1e3:.0f}ms = {res_ratio:.2f}x")
+    assert res_ratio <= MAX_RESILIENCE_RATIO, \
+        f"resilience-scored sweep costs {res_ratio:.2f}x the plain sweep " \
+        f"(ceiling {MAX_RESILIENCE_RATIO}x) — goodput scoring must stay a " \
+        f"closed-form post-pass; check for per-point trace sampling/replay"
+
     # ---- closed-form generation vs naive per-step decode ------------------
     from repro import TPU_V5E, clear_graph_cache
 
@@ -247,6 +276,10 @@ def run(report):
                            "compiled_pts_per_sec": round(nt_cmp / tt_cmp, 1),
                            "sympy_pts_per_sec": round(nt_sym / tt_sym, 1),
                            "speedup": round(topo_ratio, 2)},
+        "resilience_sweep": {"points": nr_res,
+                             "plain_s": round(tr_plain, 3),
+                             "scored_s": round(tr_res, 3),
+                             "overhead": round(res_ratio, 2)},
         "export": {"ranks": len(ranks),
                    "stamp_ranks_per_sec": round(len(ranks) / t_stamp, 1),
                    "naive_ranks_per_sec": round(len(ranks) / t_naive, 1),

@@ -39,6 +39,8 @@ def _perf_record(results: dict) -> dict:
             rec["topology_sweep_points_per_sec"] = smoke["topology_sweep"]
         if "generation" in smoke:
             rec["generation_closed_form"] = smoke["generation"]
+        if "resilience_sweep" in smoke:
+            rec["resilience_sweep_overhead"] = smoke["resilience_sweep"]
     fig8 = results.get("fig8_dse")
     if isinstance(fig8, dict) and "sweep_throughput" in fig8:
         rec["fig8_sweep_throughput"] = fig8["sweep_throughput"]

@@ -23,6 +23,8 @@ from .core import (H100_HGX, H100_HGX_POD, TPU_V5E, TPU_V5E_POD,
                    MLASpec, ModelSpec, MoESpec, ParallelCfg, SSMSpec,
                    SweepResult, Tier)
 from .core.serving import DecodeSeries, JobResult, PhaseResult
+from .ft.goodput import CkptTier, ResilienceSpec
+from .ft.stragglers import StragglerModel
 
 __all__ = [
     "Scenario", "Trace", "Phase", "Job", "JobResult", "PhaseResult",
@@ -31,4 +33,5 @@ __all__ = [
     "ParallelCfg", "SweepResult", "InfeasibleConfigError",
     "HardwareProfile", "TPU_V5E", "H100_HGX", "TPU_V5E_POD", "H100_HGX_POD",
     "ClusterTopology", "Tier",
+    "ResilienceSpec", "CkptTier", "StragglerModel",
 ]

@@ -17,6 +17,10 @@ simulation), reported through one diagnostics framework:
   validation (``STG3xx``): id uniqueness, dep resolution, DAG
   acyclicity, microbatch expansion, kv-transfer matching, SPMD rank
   agreement, manifest audit.
+* :mod:`resilience_checks` — resilience-annotation checks (``STG4xx``),
+  run as part of the trace passes: failure/restore epoch alternation
+  and monotonicity, pair completeness, manifest agreement, checkpoint-
+  step regression.
 
 High-level entry points: :meth:`repro.api.Trace.verify`,
 :meth:`repro.api.Job.verify`, ``python -m repro.analysis <trace_dir>``.
@@ -24,6 +28,8 @@ High-level entry points: :meth:`repro.api.Trace.verify`,
 from .comm_checks import check_comm
 from .diagnostics import (Diagnostic, RULES, Report, SEVERITIES, rule)
 from .graph_lint import check_guards, lint_graph
+from .resilience_checks import (check_resilience_manifest,
+                                check_resilience_nodes, resilience_markers)
 from .schedule_checks import check_schedule, check_workload_schedule
 from .trace_checks import check_trace, check_trace_dir
 
@@ -32,6 +38,8 @@ __all__ = [
     "lint_graph", "check_guards", "check_comm",
     "check_schedule", "check_workload_schedule",
     "check_trace", "check_trace_dir",
+    "check_resilience_nodes", "check_resilience_manifest",
+    "resilience_markers",
     "verify_workload", "verify_graph",
 ]
 

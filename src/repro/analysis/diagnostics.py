@@ -92,6 +92,17 @@ STALE_TRACE_FILE = rule("STG308", ERROR, "trace dir contains files the "
 EMPTY_TRACE_DIR = rule("STG309", ERROR, "trace dir holds no readable rank "
                                         "traces")
 
+# ---- resilience annotations (STG4xx) --------------------------------------
+RESILIENCE_EPOCH_ORDER = rule("STG401", ERROR, "resilience epochs out of "
+                                               "order or non-monotone in time")
+RESILIENCE_UNMATCHED = rule("STG402", ERROR, "failure marker without a "
+                                             "matching restore (or vice versa)")
+RESILIENCE_MANIFEST = rule("STG403", ERROR, "manifest resilience metadata "
+                                            "disagrees with stamped events")
+RESILIENCE_CKPT_REGRESSION = rule("STG404", ERROR, "restore rewinds to an "
+                                                   "earlier checkpoint than a "
+                                                   "prior epoch")
+
 
 @dataclass(frozen=True)
 class Diagnostic:

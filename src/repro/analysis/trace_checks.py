@@ -22,6 +22,8 @@ from .diagnostics import (ATTR_SCHEMA, DUPLICATE_NODE_ID, EMPTY_TRACE_DIR,
                           RANK_DIVERGENCE, Report, STALE_TRACE_FILE,
                           TRACE_CYCLE, UNPAIRED_SENDRECV, UNRESOLVED_DEP,
                           WARN)
+from .resilience_checks import (check_resilience_manifest,
+                                check_resilience_nodes)
 
 _NODE_TYPES = ("COMP_NODE", "COMM_COLL_NODE", "COMM_SEND_NODE",
                "COMM_RECV_NODE")
@@ -71,6 +73,7 @@ def check_trace(trace: dict, *, rank: Optional[int] = None,
     _check_deps(nodes, ids, rank, rep)
     _check_pairing(nodes, ids, rank, rep)
     _check_mb_expansion(nodes, rank, rep)
+    check_resilience_nodes(nodes, rank, rep)
     rep.tally("trace_nodes", len(nodes))
     return rep
 
@@ -104,6 +107,8 @@ def check_trace_dir(path: str, *, name: str = "") -> Report:
         rep.extend(check_trace(tr, rank=rank))
 
     _check_manifest(path, rank_files, rep)
+    check_resilience_manifest(
+        _load_json(os.path.join(path, "manifest.json")), traces, rep)
     job = _load_json(os.path.join(path, "job.json"))
     _check_rank_divergence(traces, rep, body_of)
     if job is not None:

@@ -39,6 +39,7 @@ one symbolic assembly per mode for the whole sweep (Fig 8/13 hot path).
 """
 from __future__ import annotations
 
+import math
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field, replace
@@ -60,6 +61,7 @@ from .core.serving import DecodeSeries, JobResult, PhaseResult
 from .core.stg import Graph, GraphBuilder
 from .core.symbolic import Env
 from .core.topology import ClusterTopology, normalize_placement
+from .ft.goodput import ResilienceSpec
 
 __all__ = ["Scenario", "Trace", "Phase", "Job", "graph_cache_stats",
            "clear_graph_cache", "compiled_cache_stats"]
@@ -233,6 +235,7 @@ class Scenario:
     topology: Optional[ClusterTopology] = None   # hierarchical fabric
     algorithms: tuple = ()                  # ((coll, algo), ...) overrides
     placement_order: tuple = ()             # raw .placement() request
+    resilience_spec: Optional[ResilienceSpec] = None
 
     def __post_init__(self):
         if self.mode not in ("train", "prefill", "decode"):
@@ -378,6 +381,28 @@ class Scenario:
         produce identical workloads (tests/test_backend_parity.py)."""
         return replace(self, backend=backend)
 
+    def resilience(self, spec: Optional[ResilienceSpec] = None, *,
+                   mtbf=None, ckpt="parallel_fs",
+                   interval: Optional[float] = None,
+                   recovery: str = "auto", seed: int = 0) -> "Scenario":
+        """Attach resilience assumptions (:mod:`repro.ft`): per-domain
+        MTBFs (a per-chip float or a ``{"chip"|tier_name: seconds}``
+        dict over the cluster topology's tiers), a checkpoint bandwidth
+        tier, and the recovery policy.  Downstream, :meth:`sweep` can
+        then rank by ``"effective_goodput"`` (step time deflated by
+        expected goodput under failures) and :meth:`Trace.export_chakra`
+        stamps sampled failure/restore epochs into the traces.  Pass a
+        ready :class:`~repro.ft.goodput.ResilienceSpec` or the kwargs to
+        build one; ``interval=None`` means the Young-Daly optimum per
+        config."""
+        if spec is None:
+            if mtbf is None:
+                raise ValueError(
+                    "resilience() needs a ResilienceSpec or mtbf=...")
+            spec = ResilienceSpec(mtbf=mtbf, ckpt=ckpt, interval=interval,
+                                  recovery=recovery, seed=seed)
+        return replace(self, resilience_spec=spec)
+
     # ---- phase programs -------------------------------------------------
     def phase(self, *, steps: int = 1, kv_growth: int = 0,
               pool: str = "default", name: str = "") -> "Phase":
@@ -451,6 +476,8 @@ class Scenario:
               mem_limit_gb: Optional[float] = None, recompute: bool = False,
               workers: int = 0, executor: str = "thread",
               algorithms: Optional[dict] = None,
+              rank_by: str = "step_time",
+              resilience: Optional[ResilienceSpec] = None,
               **enum_kw) -> SweepResult:
         """One-shot DSE over every strategy for ``world`` devices (Fig 8).
 
@@ -475,9 +502,18 @@ class Scenario:
         (GIL-bound; overlaps little CPU), ``executor="process"`` forks
         workers that each compile their share of structure classes
         (configs are partitioned by structure key, so no class is
-        compiled twice; falls back to serial where fork is unavailable)."""
+        compiled twice; falls back to serial where fork is unavailable).
+
+        ``resilience`` (defaulting to the scenario's
+        :meth:`resilience` spec) scores every surviving point with
+        expected goodput under failures; ``rank_by="effective_goodput"``
+        then orders by ``step_time / goodput`` — peer-recoverable
+        (replicated-dp) configs pay no checkpoint/rewind overhead, so
+        the resilience-aware winner can differ from the step-time one."""
         env = self.env()
         hw = self._effective_hw(hw)
+        if resilience is None:
+            resilience = self.resilience_spec
         if self.placement_order and "placements" not in enum_kw:
             # a .placement() on the scenario applies to every swept
             # factorization (pass placements=... to sweep several)
@@ -490,7 +526,9 @@ class Scenario:
             return self._sweep_processes(world, hw, env, workers,
                                          mem_limit_gb=mem_limit_gb,
                                          recompute=recompute,
-                                         algorithms=algos or None, **enum_kw)
+                                         algorithms=algos or None,
+                                         rank_by=rank_by,
+                                         resilience=resilience, **enum_kw)
         src = _cache.builder(self.spec, self.mode)      # one assembly/mode
         engine = (_engines.engine(self.spec, self.mode, env)
                   if self.backend == "compiled" else None)
@@ -499,17 +537,27 @@ class Scenario:
                          mem_limit_gb=mem_limit_gb, recompute=recompute,
                          name=self.spec.name, backend=self.backend,
                          engine=engine, workers=workers,
-                         algorithms=algos or None, **enum_kw)
+                         algorithms=algos or None, rank_by=rank_by,
+                         resilience=resilience, **enum_kw)
 
     def _sweep_processes(self, world: int, hw: HardwareProfile, env: Env,
                          workers: int, *, mem_limit_gb, recompute,
-                         algorithms=None, **enum_kw) -> SweepResult:
+                         algorithms=None, rank_by="step_time",
+                         resilience=None, **enum_kw) -> SweepResult:
         import multiprocessing
         import sys
         from concurrent.futures import ProcessPoolExecutor
 
         from .core.compiled import CompiledBackend
-        from .core.dse import enumerate_configs
+        from .core.dse import (RANK_MODES, enumerate_configs, rank_points,
+                               score_resilience)
+
+        if rank_by not in RANK_MODES:
+            raise ValueError(f"rank_by {rank_by!r} not in {RANK_MODES}")
+        if rank_by == "effective_goodput" and resilience is None:
+            raise ValueError(
+                'rank_by="effective_goodput" needs a resilience spec '
+                "(pass resilience=... or set Scenario.resilience(...))")
 
         # fork is the cheap path (workers inherit the warmed assembly
         # cache), but forking a multithreaded parent can deadlock —
@@ -525,6 +573,7 @@ class Scenario:
             return self.sweep(world, hw, mem_limit_gb=mem_limit_gb,
                               recompute=recompute, workers=workers,
                               executor="thread", algorithms=algorithms,
+                              rank_by=rank_by, resilience=resilience,
                               **enum_kw)
         cfgs = list(enumerate_configs(world, **enum_kw))
         # partition by structure key: every class compiles in exactly one
@@ -547,7 +596,9 @@ class Scenario:
         indexed.sort(key=lambda r: r[0])         # enumeration order
         points = [r for _, r in indexed if isinstance(r, DSEPoint)]
         skipped = [r for _, r in indexed if not isinstance(r, DSEPoint)]
-        points.sort(key=lambda p: p.sim.step_time)
+        if resilience is not None:
+            score_resilience(points, resilience, hw)
+        rank_points(points, rank_by)
         return SweepResult(points, skipped, backend=self.backend)
 
 
@@ -654,23 +705,30 @@ class Trace:
                  microbatches: Optional[int] = None,
                  schedule: Optional[str] = None,
                  vstages: Optional[int] = None,
-                 algorithms: Optional[dict] = None) -> SimResult:
+                 algorithms: Optional[dict] = None,
+                 perturb=None) -> SimResult:
         """Analytic step time; ``schedule``/``vstages``/``microbatches``
         override the config's pipeline schedule for what-if analysis
         without re-instantiating the workload.  The scenario's cluster
         topology (:meth:`Scenario.cluster`) and collective-algorithm
         overrides apply; ``algorithms`` adds per-call overrides on
-        top."""
+        top.  ``perturb`` injects stragglers — a
+        :class:`~repro.ft.stragglers.StragglerModel` or a per-stage
+        busy-multiplier sequence — replayed identically by both
+        backends (see :func:`repro.core.simulate.simulate`)."""
         hw = self.scenario._effective_hw(hw)
         algos = dict(self.scenario.algorithms)
         algos.update(algorithms or {})
+        pk = tuple(perturb) if isinstance(perturb, (list, tuple)) \
+            else perturb
         key = (self._hw_key(hw), recompute, microbatches, schedule, vstages,
-               tuple(sorted(algos.items())))
+               tuple(sorted(algos.items())), pk)
         if key not in self._sim:
             self._sim[key] = simulate(self.workload, hw, recompute=recompute,
                                       microbatches=microbatches,
                                       schedule=schedule, vstages=vstages,
-                                      algorithms=algos or None)
+                                      algorithms=algos or None,
+                                      perturb=perturb)
         return self._sim[key]
 
     def memory(self, *, stage: int = 0, recompute: bool = False,
@@ -721,11 +779,85 @@ class Trace:
         return CollectiveModel(topology, cfg=sc.cfg,
                                algorithms=dict(sc.algorithms) or None)
 
+    # ---- resilience ------------------------------------------------------
+    def resilience_report(self, hw: HardwareProfile = TPU_V5E, *,
+                          spec: Optional[ResilienceSpec] = None):
+        """Expected goodput under failures for THIS config
+        (:func:`repro.ft.goodput.score_point`): failure model from the
+        effective topology's MTBF annotations, checkpoint/restore costs
+        from the memory model's persistent state, Young-Daly interval
+        unless the spec pins one."""
+        from .ft.goodput import score_point
+        sc = self.scenario
+        spec = spec or sc.resilience_spec
+        if spec is None:
+            raise ValueError("no resilience spec: pass spec=... or set one "
+                             "with Scenario.resilience(...)")
+        hw = sc._effective_hw(hw)
+        return score_point(sc.cfg, self.simulate(hw), self.memory(),
+                           spec, hw)
+
+    def resilience_events(self, hw: HardwareProfile = TPU_V5E, *,
+                          spec: Optional[ResilienceSpec] = None,
+                          steps: int = 1000):
+        """Sample this config's failure process over ``steps`` training
+        steps of wall clock and replay it into (failure, restore)
+        incidents — the timeline :meth:`export_chakra` stamps.  Returns
+        ``(report, events)``; deterministic in the spec's seed."""
+        from .ft.goodput import ReplayEvent, replay_goodput, score_point
+        sc = self.scenario
+        spec = spec or sc.resilience_spec
+        if spec is None:
+            raise ValueError("no resilience spec: pass spec=... or set one "
+                             "with Scenario.resilience(...)")
+        hw = sc._effective_hw(hw)
+        sim = self.simulate(hw)
+        rep = score_point(sc.cfg, sim, self.memory(), spec, hw)
+        model = spec.failure_model(getattr(hw, "topology", None), sc.world)
+        horizon = max(steps, 1) * sim.step_time
+        trace = model.sample(horizon, seed=spec.seed)
+        if math.isinf(rep.interval):
+            # peer recovery: no rewind — each incident restores to the
+            # current step; failures during downtime are absorbed
+            dt = max(sim.step_time, 1e-12)
+            events, t_up = [], 0.0
+            for e in trace.events:
+                if e.t < t_up:
+                    continue
+                t_up = e.t + rep.restore_cost
+                events.append(ReplayEvent(e.t, t_up, int(e.t // dt),
+                                          e.domain))
+            events = tuple(events)
+        else:
+            events = replay_goodput(trace, rep.interval, rep.ckpt_cost,
+                                    rep.restore_cost,
+                                    horizon=horizon).events
+        return rep, events
+
+    def _resilience_export_args(self, resilience, hw, steps):
+        """Normalize export_chakra's ``resilience=`` into (events, meta):
+        a spec (or True = the scenario's) samples + replays; an iterable
+        of events passes through unmeta'd."""
+        if resilience is None:
+            return None, None
+        if resilience is True or isinstance(resilience, ResilienceSpec):
+            spec = None if resilience is True else resilience
+            rep, events = self.resilience_events(hw, spec=spec, steps=steps)
+            meta = {"recovery": rep.recovery,
+                    "goodput": round(rep.goodput, 6),
+                    "interval_s": (None if math.isinf(rep.interval)
+                                   else round(rep.interval, 3)),
+                    "seed": (spec or self.scenario.resilience_spec).seed}
+            return events, meta
+        return list(resilience), None
+
     def export_chakra(self, out_dir: str,
                       ranks: Optional[Iterable[int]] = None, *,
                       decompose_alltoall: bool = False,
                       expand_microbatches: bool = False,
                       topology: Optional[ClusterTopology] = None,
+                      resilience=None, resilience_steps: int = 1000,
+                      hw: HardwareProfile = TPU_V5E,
                       on_stale: str = "error") -> int:
         """Write per-rank Chakra-schema JSON traces; returns file count.
 
@@ -738,21 +870,38 @@ class Trace:
         group crosses — pass ``topology=hw.topology`` to stamp with the
         same fabric a topology-carrying profile simulated on.
         ``on_stale`` governs leftover rank files from a previous export
-        into the same directory (error | clean | ignore)."""
+        into the same directory (error | clean | ignore).
+
+        ``resilience`` stamps a sampled failure/restore timeline into
+        every rank body as annotated epoch markers (verified by the
+        ``STG4xx`` trace checks): pass ``True`` to use the scenario's
+        :meth:`Scenario.resilience` spec, a
+        :class:`~repro.ft.goodput.ResilienceSpec`, or a pre-replayed
+        event sequence; ``resilience_steps``/``hw`` size the sampled
+        horizon.  Omitted, the export is byte-identical to before."""
+        events, meta = self._resilience_export_args(resilience, hw,
+                                                    resilience_steps)
         return export_ranks(self.workload, out_dir, ranks,
                             decompose_alltoall=decompose_alltoall,
                             expand_microbatches=expand_microbatches,
                             comm_model=self._comm_model(topology),
+                            resilience_events=events,
+                            resilience_meta=meta,
                             on_stale=on_stale)
 
     def chakra_stage(self, stage: int = 0, *,
                      decompose_alltoall: bool = False,
                      expand_microbatches: bool = False,
-                     topology: Optional[ClusterTopology] = None) -> dict:
+                     topology: Optional[ClusterTopology] = None,
+                     resilience=None, resilience_steps: int = 1000,
+                     hw: HardwareProfile = TPU_V5E) -> dict:
+        events, _ = self._resilience_export_args(resilience, hw,
+                                                 resilience_steps)
         return export_stage(self.workload, stage,
                             decompose_alltoall=decompose_alltoall,
                             expand_microbatches=expand_microbatches,
-                            comm_model=self._comm_model(topology))
+                            comm_model=self._comm_model(topology),
+                            resilience_events=events)
 
     # ---- static verification --------------------------------------------
     def verify(self, *, include_graph: Optional[bool] = None,
@@ -1056,7 +1205,10 @@ class Job:
     # ---- DSE ------------------------------------------------------------
     def sweep(self, world: int, hw: HardwareProfile = TPU_V5E, *,
               out_tokens=None, splits=None,
-              mem_limit_gb: Optional[float] = None, **enum_kw) -> list:
+              mem_limit_gb: Optional[float] = None,
+              rank_by: str = "step_time",
+              resilience: Optional[ResilienceSpec] = None,
+              **enum_kw) -> list:
         """Serving DSE: rank parallelizations (and, with ``splits``,
         prefill/decode pool partitions) by generated tokens/s.
 
@@ -1068,9 +1220,26 @@ class Job:
         the decode total only on the decode cfg, and the KV handoff
         bytes are sharding-invariant).  Returns
         :class:`~repro.core.dse.ServingPoint` rows sorted by tokens/s;
-        see :func:`repro.core.dse.enumerate_pool_splits`."""
-        from .core.dse import ServingPoint, enumerate_configs, \
-            enumerate_pool_splits
+        see :func:`repro.core.dse.enumerate_pool_splits`.
+
+        ``resilience`` scores each point's availability under failures
+        (serving keeps no mutable state, so goodput is
+        ``1/(1 + rate*restore)`` — see
+        :func:`repro.ft.goodput.score_serving_point`);
+        ``rank_by="effective_goodput"`` orders by availability-deflated
+        tokens/s."""
+        from .core.dse import RANK_MODES, ServingPoint, \
+            enumerate_configs, enumerate_pool_splits
+        if rank_by not in RANK_MODES:
+            raise ValueError(f"rank_by {rank_by!r} not in {RANK_MODES}")
+        if resilience is None:
+            resilience = next((p.scenario.resilience_spec
+                               for p in self.phases
+                               if p.scenario.resilience_spec), None)
+        if rank_by == "effective_goodput" and resilience is None:
+            raise ValueError(
+                'rank_by="effective_goodput" needs a resilience spec '
+                "(pass resilience=... or set Scenario.resilience(...))")
         # descending: the largest length builds each cfg's series once;
         # every smaller length replays a prefix of it (total_time clips)
         toks = tuple(sorted(set(out_tokens), reverse=True)) \
@@ -1109,8 +1278,30 @@ class Job:
                                                 mem_limit_gb, enum_kw)
                     if pt is not None:
                         points.append(pt)
-        points.sort(key=lambda p: -p.result.tokens_per_s)
+        if resilience is not None:
+            self._score_serving(points, resilience, hw, world)
+        if rank_by == "effective_goodput":
+            points.sort(key=lambda p: -p.effective_tokens_per_s)
+        else:
+            points.sort(key=lambda p: -p.result.tokens_per_s)
         return points
+
+    def _score_serving(self, points, resilience, hw, world: int) -> None:
+        """Attach availability-under-failures reports to serving points:
+        the decode pool's config (the steady-state pool) supplies the
+        sharding, the whole job's ``world`` the failure exposure."""
+        from .ft.goodput import score_serving_point
+        steady = next((p.scenario for p in self.phases if p.kv_growth),
+                      self.phases[-1].scenario)
+        hw = steady._effective_hw(hw)
+        mems: dict = {}
+        for pt in points:
+            cfg = pt.decode_cfg
+            ck = cfg.describe()
+            if ck not in mems:
+                mems[ck] = steady.with_cfg(cfg).trace().memory()
+            pt.resilience = score_serving_point(cfg, mems[ck], resilience,
+                                                hw, world=world)
 
     def _on_cfg(self, cfg: ParallelCfg) -> "Job":
         """Every phase on ONE pool with ``cfg`` — a genuinely colocated

@@ -1,1 +1,6 @@
-from .checkpoint import CheckpointManager, latest_step, restore, save
+from .checkpoint import (CheckpointError, CheckpointManager,
+                         ManifestMismatchError, TemplateMismatchError,
+                         latest_step, restore, save)
+
+__all__ = ["CheckpointError", "CheckpointManager", "ManifestMismatchError",
+           "TemplateMismatchError", "latest_step", "restore", "save"]

@@ -24,6 +24,33 @@ import numpy as np
 
 from repro.models.common import Param
 
+
+class CheckpointError(Exception):
+    """Base class for checkpoint save/restore failures."""
+
+
+class TemplateMismatchError(CheckpointError):
+    """The restore template asks for a path the checkpoint lacks (or
+    vice versa) — carries the first offending tree path."""
+
+    def __init__(self, path: str, detail: str = ""):
+        self.path = path
+        suffix = f": {detail}" if detail else ""
+        super().__init__(
+            f"checkpoint/template structure mismatch at {path!r}{suffix}")
+
+
+class ManifestMismatchError(CheckpointError):
+    """A loaded array disagrees with the manifest's recorded dtype or
+    shape — the checkpoint is corrupt or was rewritten out-of-band."""
+
+    def __init__(self, path: str, field: str, expect, got):
+        self.path = path
+        super().__init__(
+            f"manifest mismatch at {path!r}: {field} recorded as "
+            f"{expect!r} but loaded {got!r}")
+
+
 _NPZ_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
              "float8_e5m2": np.uint8}
 
@@ -60,9 +87,17 @@ def _flatten(tree) -> list[tuple[str, Any]]:
 
 
 def _unflatten_into(tree, values: dict):
+    def get(path):
+        try:
+            return values[path]
+        except KeyError:
+            raise TemplateMismatchError(
+                path, "present in template, absent from checkpoint"
+            ) from None
+
     def rec(node, path):
         if isinstance(node, Param):
-            return Param(values[path], node.axes)
+            return Param(get(path), node.axes)
         if isinstance(node, dict):
             return {k: rec(node[k], f"{path}/{k}") for k in sorted(node)}
         if isinstance(node, (list, tuple)):
@@ -70,7 +105,7 @@ def _unflatten_into(tree, values: dict):
             return type(node)(seq)
         if node is None:
             return None
-        return values[path]
+        return get(path)
     return rec(tree, "")
 
 
@@ -129,6 +164,7 @@ def restore(ckpt_dir: str, template: dict, *, step: Optional[int] = None,
             continue
         path = k.replace("|", "/")
         values[path] = _from_storable(data[k], dtypes.get(path, ""))
+    _validate_manifest(d, values)
     if shardings is not None:
         flat_s = dict(_flatten(shardings))
         for k, v in list(values.items()):
@@ -137,6 +173,31 @@ def restore(ckpt_dir: str, template: dict, *, step: Optional[int] = None,
                 values[k] = jax.device_put(v, sh)
     state = _unflatten_into(template, values)
     return state, step
+
+
+def _validate_manifest(step_dir: str, values: dict) -> None:
+    """Check loaded arrays against the committed manifest (when this
+    host can see one): dtype and shape per path must match what host 0
+    recorded at save time — a disagreement means the checkpoint was
+    corrupted or rewritten out-of-band, and restoring it would poison
+    training silently."""
+    mpath = os.path.join(step_dir, "manifest.json")
+    if not os.path.exists(mpath):
+        return
+    with open(mpath) as f:
+        manifest = json.load(f)
+    for entry in manifest.get("entries", []):
+        path = entry["path"]
+        if entry.get("none") or path not in values:
+            continue
+        arr = values[path]
+        if entry.get("dtype") and str(arr.dtype) != entry["dtype"]:
+            raise ManifestMismatchError(path, "dtype", entry["dtype"],
+                                        str(arr.dtype))
+        if entry.get("shape") is not None \
+                and list(arr.shape) != list(entry["shape"]):
+            raise ManifestMismatchError(path, "shape", tuple(entry["shape"]),
+                                        tuple(arr.shape))
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -157,7 +218,9 @@ class CheckpointManager:
         os.makedirs(ckpt_dir, exist_ok=True)
 
     def maybe_save(self, step: int, state: dict, **kw) -> Optional[str]:
-        if step % self.every:
+        # step 0 is the init state — nothing trained yet, and a ckpt
+        # there burns a keep-N slot before the first real save
+        if step == 0 or step % self.every:
             return None
         path = save(self.dir, step, state, **kw)
         self._gc()

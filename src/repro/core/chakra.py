@@ -95,9 +95,46 @@ def node_to_chakra(n: NodeRec, *, decompose_alltoall: bool = False,
                        "pg_size": n.comm["group"]}}]
 
 
+def _resilience_nodes(events, base_id: int, tail_id) -> list[dict]:
+    """Failure/restore epoch markers as annotated COMP nodes.
+
+    Each incident becomes a (failure, restore) node pair: zero-cost
+    compute nodes carrying ``phase="resilience"``, the epoch index, the
+    wall-clock times, and the checkpoint step the restore rewinds to —
+    feeders that understand them can replay downtime, everything else
+    sees two empty compute nodes.  The pairs are control-chained onto
+    the end of the step body (failure -> restore -> next failure), so
+    the trace stays a DAG with one tail.  Verified by the ``STG4xx``
+    rule family in :mod:`repro.analysis`."""
+    out: list[dict] = []
+    prev = tail_id
+    for i, e in enumerate(events):
+        ev = e if isinstance(e, dict) else {
+            "t_fail": e.t_fail, "t_restore": e.t_restore,
+            "ckpt_step": e.ckpt_step, "domain": getattr(e, "domain", "")}
+        fid, rid = base_id + 2 * i, base_id + 2 * i + 1
+        common = {"phase": "resilience", "epoch": i,
+                  "ckpt_step": int(ev.get("ckpt_step", 0)),
+                  "domain": str(ev.get("domain", "")),
+                  "num_ops": 0, "tensor_size": 0}
+        out.append({"id": fid, "name": f"resilience_failure_{i}",
+                    "type": "COMP_NODE", "data_deps": [],
+                    "ctrl_deps": [prev] if prev is not None else [],
+                    "attrs": {**common, "kind": "failure",
+                              "t": float(ev["t_fail"])}})
+        out.append({"id": rid, "name": f"resilience_restore_{i}",
+                    "type": "COMP_NODE", "data_deps": [],
+                    "ctrl_deps": [fid],
+                    "attrs": {**common, "kind": "restore",
+                              "t": float(ev["t_restore"])}})
+        prev = rid
+    return out
+
+
 def export_stage(w: Workload, stage: int, *, decompose_alltoall: bool = False,
                  expand_microbatches: bool = False,
-                 comm_model: "CollectiveModel | None" = None) -> dict:
+                 comm_model: "CollectiveModel | None" = None,
+                 resilience_events=None) -> dict:
     if expand_microbatches:
         nodes = _expanded_nodes(w, stage,
                                 decompose_alltoall=decompose_alltoall,
@@ -112,6 +149,12 @@ def export_stage(w: Workload, stage: int, *, decompose_alltoall: bool = False,
     ids = {nd["id"] for nd in nodes}
     for nd in nodes:
         nd["data_deps"] = [d for d in nd["data_deps"] if d in ids]
+    if resilience_events:
+        # appended AFTER dep pruning: epoch markers have no data deps and
+        # their ids sit past every body id (incl. negated recv ids)
+        base = max((abs(nd["id"]) for nd in nodes), default=0) + 1
+        tail = nodes[-1]["id"] if nodes else None
+        nodes = nodes + _resilience_nodes(resilience_events, base, tail)
     return {"schema": "Chakra-json-v0.0.4", "workload": w.name,
             "stage": stage, "nodes": nodes}
 
@@ -421,7 +464,9 @@ def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = Non
                  *, decompose_alltoall: bool = False,
                  expand_microbatches: bool = False,
                  comm_model: "CollectiveModel | None" = None,
-                 on_stale: str = "error") -> int:
+                 on_stale: str = "error",
+                 resilience_events=None,
+                 resilience_meta: Optional[dict] = None) -> int:
     """Stamp per-rank Chakra JSON files (rank -> its stage's trace).
 
     Each stage's node array is serialized exactly ONCE; per rank only the
@@ -431,7 +476,14 @@ def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = Non
 
     The emitted file set is recorded in ``manifest.json``; leftover rank
     files from a previous export into the same directory are handled per
-    ``on_stale`` (see :func:`_prepare_out_dir`)."""
+    ``on_stale`` (see :func:`_prepare_out_dir`).
+
+    ``resilience_events`` (a sequence of :class:`repro.ft.ReplayEvent`
+    or equivalent dicts) stamps failure/restore epoch markers into every
+    stage body — failures are job-wide, so every rank sees the same
+    epochs — and records the incident count (+ ``resilience_meta``) in
+    the manifest, which the ``STG403`` audit cross-checks against the
+    stamped nodes."""
     cfg = w.cfg
     world = cfg.world
     rank_list = list(ranks) if ranks is not None else list(range(world))
@@ -442,7 +494,8 @@ def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = Non
         s: json.dumps(export_stage(
             w, s, decompose_alltoall=decompose_alltoall,
             expand_microbatches=expand_microbatches,
-            comm_model=comm_model))[:-1]
+            comm_model=comm_model,
+            resilience_events=resilience_events))[:-1]
         for s in range(w.stages)}
     count = 0
     for rank in rank_list:
@@ -457,6 +510,10 @@ def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = Non
             f.write(stage_body[stage])
             f.write(f', "rank": {rank}, "coords": {json.dumps(coords)}}}')
         count += 1
+    meta = {}
+    if resilience_events is not None:
+        meta["resilience"] = {"events": len(list(resilience_events)),
+                              **(resilience_meta or {})}
     _write_manifest(out_dir, emitted, "ranks", world=world,
-                    workload=w.name)
+                    workload=w.name, **meta)
     return count

@@ -594,6 +594,33 @@ class CostProgram:
                             inflight_factor=inflight,
                             recompute_extra=extra)
 
+    def state_bytes(self, cfg: ParallelCfg, *, stage: int = 0,
+                    master_fp32: bool = True) -> float:
+        """Per-rank persistent (checkpointable) bytes: weights +
+        optimizer moments + fp32 masters — the terms
+        :func:`repro.ft.goodput.state_bytes` reads off a full
+        :class:`MemoryReport`, without the activation event sweep.
+        Accumulation order mirrors :meth:`peak_memory` term-for-term so
+        the two agree bit-for-bit; serving graphs have no Update ops and
+        naturally cost weights-only."""
+        mesh = cfg.mesh
+        _, lb = self._local(cfg)
+        w_idx, upds, _ = self._mem_static(cfg.pp, getattr(cfg, "vstages", 1),
+                                          stage)
+        weights = opt_states = master = 0.0
+        for t in w_idx:
+            weights += lb[t]
+        wnumel = self._wnumel
+        for w_t, shard_axes, _grad_axes in upds:
+            m_bytes = wnumel[w_t] * 4
+            deg = 1
+            for a in shard_axes:
+                deg *= mesh[a]
+            opt_states += 2 * m_bytes / deg
+            if master_fp32:
+                master += m_bytes / deg
+        return float(weights + opt_states + master)
+
 
 def _evaluate_exprs(exprs: list, env: Env) -> list:
     """Evaluate all coefficient expressions at once via ``sympy.lambdify``
@@ -666,6 +693,9 @@ class CompiledBackend:
 
     def memory(self, cfg: ParallelCfg, **kw) -> MemoryReport:
         return self.program(cfg).peak_memory(cfg, **kw)
+
+    def state_bytes(self, cfg: ParallelCfg, **kw) -> float:
+        return self.program(cfg).state_bytes(cfg, **kw)
 
     def stats(self) -> dict:
         with self._lock:

@@ -56,6 +56,7 @@ class DSEPoint:
     sim: SimResult
     mem: MemoryReport
     label: str = ""
+    resilience: object = None    # ft.ResilienceReport when swept with one
 
     @property
     def step_ms(self) -> float:
@@ -65,11 +66,30 @@ class DSEPoint:
     def peak_gb(self) -> float:
         return self.mem.peak_gb
 
+    @property
+    def goodput(self) -> float:
+        """Useful fraction of wall clock (1.0 without a resilience spec)."""
+        return self.resilience.goodput if self.resilience else 1.0
+
+    @property
+    def effective_step_time(self) -> float:
+        """Step time deflated by goodput — wall seconds per useful step
+        once checkpoint writes, lost work, and restores are charged."""
+        return self.sim.step_time / self.goodput
+
+    @property
+    def effective_step_ms(self) -> float:
+        return self.effective_step_time * 1e3
+
     def row(self) -> dict:
-        return {"strategy": self.cfg.describe(), "step_ms": round(self.step_ms, 3),
-                "peak_gb": round(self.peak_gb, 2),
-                "overlap": round(self.sim.overlap_ratio, 3),
-                "exposed_comm_ms": round(self.sim.exposed_comm * 1e3, 3)}
+        out = {"strategy": self.cfg.describe(), "step_ms": round(self.step_ms, 3),
+               "peak_gb": round(self.peak_gb, 2),
+               "overlap": round(self.sim.overlap_ratio, 3),
+               "exposed_comm_ms": round(self.sim.exposed_comm * 1e3, 3)}
+        if self.resilience is not None:
+            out["eff_step_ms"] = round(self.effective_step_ms, 3)
+            out.update(self.resilience.row())
+        return out
 
 
 @dataclass
@@ -147,18 +167,34 @@ class ServingPoint:
     prefill_cfg: ParallelCfg
     decode_cfg: ParallelCfg
     result: object
+    resilience: object = None        # worst-pool ft.ResilienceReport
 
     @property
     def tokens_per_s(self) -> float:
         return self.result.tokens_per_s
 
+    @property
+    def goodput(self) -> float:
+        return self.resilience.goodput if self.resilience else 1.0
+
+    @property
+    def effective_tokens_per_s(self) -> float:
+        """Delivered tokens/s once failure downtime is charged (both
+        pools stall while either recovers — the request pipeline is
+        synchronous across the handoff)."""
+        return self.tokens_per_s * self.goodput
+
     def row(self) -> dict:
         split = "colocated" if len(self.split) == 1 \
             else f"{self.split[0]}+{self.split[1]}"
-        return {"out_tokens": self.out_tokens, "split": split,
-                "prefill": self.prefill_cfg.describe(),
-                "decode": self.decode_cfg.describe(),
-                **self.result.row()}
+        out = {"out_tokens": self.out_tokens, "split": split,
+               "prefill": self.prefill_cfg.describe(),
+               "decode": self.decode_cfg.describe(),
+               **self.result.row()}
+        if self.resilience is not None:
+            out["eff_tokens_per_s"] = round(self.effective_tokens_per_s, 1)
+            out.update(self.resilience.row())
+        return out
 
 
 def enumerate_pool_splits(world: int) -> list[tuple[int, int]]:
@@ -344,6 +380,37 @@ def evaluate_or_skip(cfg: ParallelCfg, *, env: Env, hw: HardwareProfile,
     return pt
 
 
+RANK_MODES = ("step_time", "effective_goodput")
+
+
+def score_resilience(points: list[DSEPoint], resilience, hw) -> None:
+    """Attach a :class:`repro.ft.ResilienceReport` to every point (in
+    place): failure model from the profile's topology, checkpoint cost
+    from each point's own memory report, recovery path from its dp
+    replication.  Shared by the thread and process sweep paths so both
+    rank identically."""
+    from ..ft.goodput import score_point
+    for p in points:
+        p.resilience = score_point(p.cfg, p.sim, p.mem, resilience, hw)
+
+
+def rank_points(points: list[DSEPoint], rank_by: str) -> None:
+    """Sort sweep points (in place) by the requested objective.
+    ``effective_goodput`` ranks by goodput-deflated step time — useful
+    wall seconds per step — so it needs points already scored by
+    :func:`score_resilience`."""
+    if rank_by not in RANK_MODES:
+        raise ValueError(f"rank_by {rank_by!r} not in {RANK_MODES}")
+    if rank_by == "effective_goodput":
+        if any(p.resilience is None for p in points):
+            raise ValueError(
+                "rank_by='effective_goodput' needs a resilience spec "
+                "(pass resilience=ResilienceSpec(...) to the sweep)")
+        points.sort(key=lambda p: p.effective_step_time)
+    else:
+        points.sort(key=lambda p: p.sim.step_time)
+
+
 def sweep(build: Callable[[], tuple], env: Env, world: int,
           hw: HardwareProfile = TPU_V5E, *, n_layers: int,
           mem_limit_gb: Optional[float] = None,
@@ -352,6 +419,8 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
           workers: int = 0, chunk_size: int = 16,
           algorithms: Optional[dict] = None,
           verify: bool = False,
+          rank_by: str = "step_time",
+          resilience=None,
           **enum_kw) -> SweepResult:
     """Evaluate every enumerated strategy; see module docstring.
 
@@ -366,9 +435,22 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
     ``SweepResult.pruned`` tallies why.  ``verify=True`` additionally
     attaches structured :class:`repro.analysis.Diagnostic` records to
     every skipped config.
+
+    ``resilience`` (a :class:`repro.ft.ResilienceSpec`) scores every
+    feasible point's goodput under failures; ``rank_by=
+    "effective_goodput"`` then ranks by goodput-deflated step time
+    instead of raw step time — dp-replicated configs recover from peers
+    while tp*pp-heavy ones rewind to storage, so the two rankings can
+    disagree.  With the default ``rank_by="step_time"`` and no spec the
+    sweep is bit-identical to before.
     """
     if backend not in ("compiled", "sympy"):
         raise ValueError(f"backend {backend!r} not in compiled|sympy")
+    if rank_by not in RANK_MODES:
+        raise ValueError(f"rank_by {rank_by!r} not in {RANK_MODES}")
+    if rank_by == "effective_goodput" and resilience is None:
+        raise ValueError(
+            "rank_by='effective_goodput' requires resilience=ResilienceSpec")
     cfgs = list(enumerate_configs(world, **enum_kw))
     if backend == "compiled" and engine is None:
         engine = CompiledBackend(build, env, n_layers=n_layers)
@@ -410,5 +492,7 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
     points = [r for r in results if isinstance(r, DSEPoint)]
     skipped = prefiltered + [r for r in results
                              if isinstance(r, SkippedConfig)]
-    points.sort(key=lambda p: p.sim.step_time)
+    if resilience is not None:
+        score_resilience(points, resilience, hw)
+    rank_points(points, rank_by)
     return SweepResult(points, skipped, backend=backend)

@@ -181,13 +181,34 @@ def _span3(nodes: list[NodeRec], hw: HardwareProfile,
     return span, cbusy, mbusy, max(0.0, span - cbusy)
 
 
+def _stage_multipliers(perturb, cfg) -> Optional[tuple[float, ...]]:
+    """Normalize a ``perturb`` argument to per-physical-stage busy
+    multipliers: objects expose ``stage_multipliers(cfg)`` (the
+    :class:`repro.ft.StragglerModel` protocol), plain sequences are
+    taken as-is.  ``None`` -> ``None`` (the failure-free fast path)."""
+    if perturb is None:
+        return None
+    if hasattr(perturb, "stage_multipliers"):
+        mults = tuple(float(m) for m in perturb.stage_multipliers(cfg))
+    else:
+        mults = tuple(float(m) for m in perturb)
+    pp = max(1, cfg.pp)
+    if len(mults) != pp:
+        raise ValueError(
+            f"perturb yields {len(mults)} stage multipliers for pp={pp}")
+    if any(m <= 0 for m in mults):
+        raise ValueError(f"stage multipliers must be > 0, got {mults}")
+    return mults
+
+
 def simulate(w: Workload, hw: HardwareProfile, *,
              microbatches: int | None = None,
              recompute: bool = False,
              schedule: str | None = None,
              vstages: int | None = None,
              algorithms: dict | None = None,
-             model: CollectiveModel | None = None) -> SimResult:
+             model: CollectiveModel | None = None,
+             perturb=None) -> SimResult:
     """Analytic step time under ``w.cfg``'s pipeline schedule.
 
     ``schedule``/``vstages``/``microbatches`` override the config's
@@ -201,7 +222,16 @@ def simulate(w: Workload, hw: HardwareProfile, *,
     (+ ``w.cfg``'s axis placement when the profile has a topology);
     ``algorithms`` forces per-collective algorithm choices
     (``{"AllReduce": "tree"}``) and ``model`` supplies a pre-built model
-    outright."""
+    outright.
+
+    ``perturb`` injects stragglers: a :class:`repro.ft.StragglerModel`
+    (or a raw per-stage multiplier sequence) scales every slot a stage
+    executes — the barrier semantics of synchronous training, where the
+    slowest rank in a stage paces the whole stage.  Scaling happens on
+    the per-slot durations BEFORE the schedule replay, so both
+    evaluation backends (which share this function) stay bit-identical
+    under perturbation by construction; ``perturb=None`` leaves every
+    code path untouched."""
     cfg = w.cfg
     if model is None:
         model = comm_model(hw, cfg, algorithms)
@@ -210,9 +240,11 @@ def simulate(w: Workload, hw: HardwareProfile, *,
     sched_name = schedule or getattr(cfg, "schedule", "1f1b")
     wl_v = getattr(cfg, "vstages", 1)
     v = vstages if vstages is not None else wl_v
+    mults = _stage_multipliers(perturb, cfg)
 
     if pp <= 1:
-        return _simulate_single(w, hw, mb, recompute, sched_name, model)
+        return _simulate_single(w, hw, mb, recompute, sched_name, model,
+                                mult=mults[0] if mults else 1.0)
     if v != wl_v or (sched_name != "interleaved" and wl_v > 1):
         raise ValueError(
             f"schedule override {sched_name!r}/vstages={v} does not match "
@@ -236,11 +268,19 @@ def simulate(w: Workload, hw: HardwareProfile, *,
                 bwd_c.setdefault(n.vstage, []).append(n)
             else:
                 opt_nodes.append(n)
+        m = mults[s] if mults else 1.0
+
+        def span3(nodes):
+            sp, cb, mz, ex = _span3(nodes, hw, model)
+            if m != 1.0:        # straggler-paced stage: every slot dilates
+                return sp * m, cb * m, mz * m, ex * m
+            return sp, cb, mz, ex
+
         t_fwd = t_bwd = cbusy = mbusy = exposed = 0.0
         for c in sorted(set(fwd_c) | set(bwd_c)):
             fwd = fwd_c.get(c, [])
             bwd = bwd_c.get(c, [])
-            f_span, f_cb, f_mb, f_exp = _span3(fwd, hw, model)
+            f_span, f_cb, f_mb, f_exp = span3(fwd)
             dur[(FWD, c)] = f_span
             if recompute:
                 # activation recompute re-runs the forward during backward
@@ -248,14 +288,14 @@ def simulate(w: Workload, hw: HardwareProfile, *,
             if split_bwd:
                 b_in = [n for n in bwd if not n.wgrad]
                 b_w = [n for n in bwd if n.wgrad]
-                bi_span, bi_cb, bi_mb, bi_exp = _span3(b_in, hw, model)
-                bw_span, bw_cb, bw_mb, bw_exp = _span3(b_w, hw, model)
+                bi_span, bi_cb, bi_mb, bi_exp = span3(b_in)
+                bw_span, bw_cb, bw_mb, bw_exp = span3(b_w)
                 dur[(BWD_IN, c)] = bi_span
                 dur[(BWD_W, c)] = bw_span
                 b_span = bi_span + bw_span
                 b_cb, b_mb, b_exp = bi_cb + bw_cb, bi_mb + bw_mb, bi_exp + bw_exp
             else:
-                b_span, b_cb, b_mb, b_exp = _span3(bwd, hw, model)
+                b_span, b_cb, b_mb, b_exp = span3(bwd)
                 dur[(BWD, c)] = b_span
             t_fwd += f_span
             t_bwd += b_span
@@ -263,6 +303,8 @@ def simulate(w: Workload, hw: HardwareProfile, *,
             mbusy += f_mb + b_mb
             exposed += f_exp + b_exp
         opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw, model)
+        if m != 1.0:
+            opt_span, ocbusy, ombusy = opt_span * m, ocbusy * m, ombusy * m
         stage_sims.append(StageSim(
             t_fwd=t_fwd, t_bwd=t_bwd, t_opt=opt_span,
             compute_busy=cbusy, comm_busy=mbusy, exposed_comm=exposed,
@@ -277,7 +319,7 @@ def simulate(w: Workload, hw: HardwareProfile, *,
 
 def _simulate_single(w: Workload, hw: HardwareProfile, mb: int,
                      recompute: bool, sched_name: str,
-                     model: CollectiveModel) -> SimResult:
+                     model: CollectiveModel, mult: float = 1.0) -> SimResult:
     """pp == 1: no pipeline — one combined fwd+bwd span per microbatch
     (kept on the exact pre-schedule-refactor arithmetic: the bulk of any
     DSE sweep is pp == 1 points and this is their hot path)."""
@@ -289,6 +331,10 @@ def _simulate_single(w: Workload, hw: HardwareProfile, mb: int,
     opt_nodes = [n for n in nodes if n.phase == "opt"]
     span, cbusy, mbusy = _schedule(mb_nodes, hw, model)
     opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw, model)
+    if mult != 1.0:             # the slowest rank paces the whole step
+        span, cbusy, mbusy = span * mult, cbusy * mult, mbusy * mult
+        opt_span, ocbusy, ombusy = (opt_span * mult, ocbusy * mult,
+                                    ombusy * mult)
     st = StageSim(
         t_fwd=span, t_bwd=0.0, t_opt=opt_span,
         compute_busy=cbusy, comm_busy=mbusy,

@@ -30,6 +30,7 @@ like any other strategy dimension and changes *time only, never bytes*.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 __all__ = ["Tier", "ClusterTopology", "axis_span", "default_placement",
            "normalize_placement", "h100_hgx_pod", "tpu_v5e_pod", "flat"]
@@ -42,11 +43,19 @@ class Tier:
     ``degree`` units of the previous (inner) level are joined by links
     of this tier; ``bandwidth`` is bytes/s per direction per link and
     ``latency`` the per-hop (per ring/tree step) latency in seconds.
+
+    ``mtbf`` (optional) is the mean time between failures of ONE unit of
+    this tier in seconds — a whole node for the intra-node tier, a rail /
+    slice for the inter-node tier.  It feeds the resilience layer
+    (:class:`repro.ft.FailureModel`): a unit failure takes down every
+    rank the unit hosts.  ``None`` means the tier contributes no failure
+    rate of its own (chip-level failures are modeled separately).
     """
     name: str
     degree: int
     bandwidth: float
     latency: float
+    mtbf: Optional[float] = None
 
     def __post_init__(self):
         if self.degree < 1:
@@ -55,6 +64,8 @@ class Tier:
             raise ValueError(f"tier {self.name!r}: bandwidth must be > 0")
         if self.latency < 0:
             raise ValueError(f"tier {self.name!r}: latency must be >= 0")
+        if self.mtbf is not None and self.mtbf <= 0:
+            raise ValueError(f"tier {self.name!r}: mtbf must be > 0 seconds")
 
 
 @dataclass(frozen=True)
@@ -165,24 +176,36 @@ def axis_span(cfg, axis: str) -> tuple[int, int]:
 
 def h100_hgx_pod(nodes: int = 4, *, nvlink_bw: float = 450e9,
                  ib_bw: float = 50e9, nvlink_lat: float = 1.0e-6,
-                 ib_lat: float = 5.0e-6, gpus_per_node: int = 8
-                 ) -> ClusterTopology:
-    """H100 HGX pod: 8-GPU NVLink boxes joined by per-GPU IB rails."""
+                 ib_lat: float = 5.0e-6, gpus_per_node: int = 8,
+                 node_mtbf: Optional[float] = None,
+                 rail_mtbf: Optional[float] = None) -> ClusterTopology:
+    """H100 HGX pod: 8-GPU NVLink boxes joined by per-GPU IB rails.
+
+    ``node_mtbf`` / ``rail_mtbf`` (seconds per unit) feed the resilience
+    layer: a node failure takes down its 8 GPUs, a rail failure a whole
+    node group (see :class:`repro.ft.FailureModel`)."""
     return ClusterTopology(
         name=f"h100-hgx-{nodes}x{gpus_per_node}",
-        tiers=(Tier("nvlink", gpus_per_node, nvlink_bw, nvlink_lat),
-               Tier("ib", nodes, ib_bw, ib_lat)))
+        tiers=(Tier("nvlink", gpus_per_node, nvlink_bw, nvlink_lat,
+                    mtbf=node_mtbf),
+               Tier("ib", nodes, ib_bw, ib_lat, mtbf=rail_mtbf)))
 
 
 def tpu_v5e_pod(slices: int = 4, *, ici_bw: float = 50e9,
                 dci_bw: float = 25e9, ici_lat: float = 1.0e-6,
-                dci_lat: float = 10.0e-6, chips_per_slice: int = 16
-                ) -> ClusterTopology:
-    """TPU v5e multislice: ICI within a slice, DCI between slices."""
+                dci_lat: float = 10.0e-6, chips_per_slice: int = 16,
+                slice_mtbf: Optional[float] = None,
+                dci_mtbf: Optional[float] = None) -> ClusterTopology:
+    """TPU v5e multislice: ICI within a slice, DCI between slices.
+
+    ``slice_mtbf`` / ``dci_mtbf`` (seconds per unit) attach failure
+    domains for the resilience layer (a slice failure takes down its
+    chips, a DCI failure a slice group)."""
     return ClusterTopology(
         name=f"tpu-v5e-{slices}x{chips_per_slice}",
-        tiers=(Tier("ici", chips_per_slice, ici_bw, ici_lat),
-               Tier("dci", slices, dci_bw, dci_lat)))
+        tiers=(Tier("ici", chips_per_slice, ici_bw, ici_lat,
+                    mtbf=slice_mtbf),
+               Tier("dci", slices, dci_bw, dci_lat, mtbf=dci_mtbf)))
 
 
 def flat(devices: int, bandwidth: float, latency: float,

@@ -1,0 +1,225 @@
+"""Checkpoint I/O hardening (typed errors, manifest validation, step-0
+guard, keep-N rotation, view-dtype roundtrips, elastic restore) and the
+straggler watchdog's evict/decay bookkeeping."""
+import json
+import os
+
+import jax
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.ckpt import (CheckpointError, CheckpointManager,
+                        ManifestMismatchError, TemplateMismatchError,
+                        latest_step, restore, save)
+from repro.ft import StragglerModel, StragglerWatchdog, drive_watchdog, \
+    elastic_mesh_shape, shrink_cfg
+from repro.models.common import Param
+
+
+def _state(dtype=np.float32):
+    return {
+        "layers": [
+            {"w": Param(np.arange(12, dtype=dtype).reshape(3, 4),
+                        ("d_model", "d_ff")),
+             "b": Param(np.zeros(4, dtype=dtype), ("d_ff",))},
+        ],
+        "step_marker": np.asarray(7, dtype=np.int32),
+        "frozen": None,
+    }
+
+
+def _leaves(state):
+    out = []
+
+    def rec(node):
+        if isinstance(node, Param):
+            out.append(np.asarray(node.value))
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k])
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                rec(v)
+        elif node is not None:
+            out.append(np.asarray(node))
+    rec(state)
+    return out
+
+
+# ---- roundtrips -----------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "float8_e4m3fn",
+                                   "float8_e5m2"])
+def test_save_restore_roundtrip_dtypes(tmp_path, dtype):
+    np_dtype = getattr(ml_dtypes, dtype) if dtype != "float32" \
+        else np.float32
+    state = _state(np_dtype)
+    save(str(tmp_path), 5, state)
+    restored, step = restore(str(tmp_path), state)
+    assert step == 5
+    for a, b in zip(_leaves(state), _leaves(restored)):
+        assert a.dtype == b.dtype          # view dtypes survive npz
+        np.testing.assert_array_equal(
+            a.view(np.uint8) if a.dtype != np.int32 else a,
+            b.view(np.uint8) if b.dtype != np.int32 else b)
+
+
+def test_restore_with_shardings_device_put(tmp_path):
+    state = _state()
+    save(str(tmp_path), 1, state)
+    dev = jax.devices()[0]
+    shardings = {"layers": [{"w": dev, "b": dev}],
+                 "step_marker": dev, "frozen": None}
+    restored, _ = restore(str(tmp_path), state, shardings=shardings)
+    assert isinstance(restored["layers"][0]["w"], Param)
+
+
+def test_elastic_restore_smaller_mesh(tmp_path):
+    """The checkpoint stores logical axes, not device ids: state written
+    under one parallel config restores under a shrunken one (the
+    elastic path after an eviction)."""
+    from repro import ParallelCfg
+    cfg = ParallelCfg(axes={"dp": 4, "tp": 2}, dp_axis="dp", tp_axis="tp",
+                      sp=True, pp=2)
+    state = _state()
+    save(str(tmp_path), 10, state, n_hosts=cfg.world // 8 or 1)
+    small = shrink_cfg(cfg, 8)             # dp 4 -> 2, model mesh intact
+    assert small.world == 8
+    restored, step = restore(str(tmp_path), state)
+    assert step == 10
+    np.testing.assert_array_equal(
+        np.asarray(restored["layers"][0]["w"].value),
+        np.asarray(state["layers"][0]["w"].value))
+    assert restored["layers"][0]["w"].axes == ("d_model", "d_ff")
+    assert elastic_mesh_shape(small.world, model=4) == (2, 4)
+
+
+# ---- typed errors ---------------------------------------------------------
+
+def test_template_mismatch_is_typed_with_path(tmp_path):
+    state = _state()
+    save(str(tmp_path), 2, state)
+    bigger = dict(state)
+    bigger["extra"] = Param(np.ones(2, dtype=np.float32), ("d",))
+    with pytest.raises(TemplateMismatchError) as ei:
+        restore(str(tmp_path), bigger)
+    assert ei.value.path == "/extra"
+    assert isinstance(ei.value, CheckpointError)
+    assert "/extra" in str(ei.value)
+
+
+def test_manifest_dtype_mismatch_rejected(tmp_path):
+    state = _state()
+    d = save(str(tmp_path), 3, state)
+    mpath = os.path.join(d, "manifest.json")
+    man = json.load(open(mpath))
+    ent = next(e for e in man["entries"] if e["path"].endswith("/w"))
+    ent["dtype"] = "float64"
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(ManifestMismatchError) as ei:
+        restore(str(tmp_path), state)
+    assert ei.value.path == ent["path"]
+    assert "float64" in str(ei.value)
+
+
+def test_manifest_shape_mismatch_rejected(tmp_path):
+    state = _state()
+    d = save(str(tmp_path), 3, state)
+    mpath = os.path.join(d, "manifest.json")
+    man = json.load(open(mpath))
+    ent = next(e for e in man["entries"] if e["path"].endswith("/w"))
+    ent["shape"] = [4, 3]
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(ManifestMismatchError, match="shape"):
+        restore(str(tmp_path), state)
+
+
+# ---- manager policy -------------------------------------------------------
+
+def test_maybe_save_skips_step_zero(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, every=10)
+    state = _state()
+    assert mgr.maybe_save(0, state) is None          # init state: no ckpt
+    assert latest_step(str(tmp_path)) is None
+    assert mgr.maybe_save(5, state) is None          # off-cadence
+    assert mgr.maybe_save(10, state) is not None
+
+
+def test_keep_n_rotation_order(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, every=1)
+    state = _state()
+    for s in (1, 2, 3, 4):
+        mgr.maybe_save(s, state)
+    steps = sorted(int(f.split("_")[1]) for f in os.listdir(tmp_path))
+    assert steps == [3, 4]
+    restored, step = mgr.resume(state)
+    assert step == 4 and restored is not None
+
+
+# ---- watchdog -------------------------------------------------------------
+
+def _hosts(slow, n=4, mult=3.0):
+    return {f"h{i}": (mult if f"h{i}" == slow else 1.0) for i in range(n)}
+
+
+def test_watchdog_evict_decrements_world_and_clears_strikes():
+    wd = StragglerWatchdog(n_hosts=4, threshold=1.5, max_strikes=2)
+    wd.observe(1.0)                                  # settle EMA
+    per = {h: m * 1.0 for h, m in _hosts("h2").items()}
+    assert wd.observe(3.0, per_host=per).kind == "warn"
+    d = wd.observe(3.0, per_host=per)
+    assert d.kind == "evict" and d.hosts == ("h2",)
+    assert d.new_world == 3 and wd.n_hosts == 3      # world shrank
+    assert "h2" not in wd.strikes                    # history gone
+    # a second straggler evicts against the SHRUNKEN world
+    per = {h: m * 1.0 for h, m in _hosts("h1", n=3).items()}
+    wd.observe(1.0)
+    for _ in range(4):
+        d = wd.observe(3.0, per_host=per)
+        if d.kind == "evict":
+            break
+    assert d.kind == "evict" and d.new_world == 2
+
+
+def test_watchdog_strikes_decay_on_healthy_steps():
+    wd = StragglerWatchdog(n_hosts=4, threshold=1.5, max_strikes=3,
+                           strike_decay=0.5)
+    wd.observe(1.0)
+    per = {h: m * 1.0 for h, m in _hosts("h0").items()}
+    wd.observe(3.0, per_host=per)
+    assert wd.strikes["h0"] == 1
+    wd.observe(1.0)                                  # healthy: 1 -> 0.5
+    assert wd.strikes["h0"] == 0.5
+    wd.observe(1.0)                                  # 0.25 < 0.5: dropped
+    assert "h0" not in wd.strikes
+    # transient blips never reach max_strikes when spaced by healthy
+    # steps; a persistent straggler still gets evicted
+    for _ in range(6):
+        wd.observe(3.0, per_host=per)
+        d = wd.observe(1.0)
+    assert wd.n_hosts == 4 and d.kind == "ok"
+
+
+def test_drive_watchdog_detects_injected_straggler():
+    wd = StragglerWatchdog(n_hosts=4, threshold=1.5, max_strikes=2)
+    decisions = drive_watchdog(wd, healthy_step=1.0,
+                               host_mults={"h0": 1.0, "h1": 2.5,
+                                           "h2": 1.0, "h3": 1.0},
+                               warmup=3, steps=10)
+    kinds = [d.kind for d in decisions]
+    assert kinds[:3] == ["ok", "ok", "ok"]
+    ev = next(d for d in decisions if d.kind == "evict")
+    assert ev.hosts == ("h1",) and ev.new_world == 3
+    # after the eviction the remaining fleet is healthy
+    assert decisions[-1].kind == "ok"
+
+
+def test_straggler_model_host_view_feeds_watchdog():
+    sm = StragglerModel(slow_fraction=0.0, slowdown=4.0, seed=0)
+    mults = dict(sm.host_multipliers(32, ranks_per_host=8))
+    assert set(mults) == {0, 1, 2, 3}
+    assert all(m == 1.0 for m in mults.values())     # nobody straggles
+    wd = StragglerWatchdog(n_hosts=4, threshold=1.5, max_strikes=2)
+    assert all(d.kind == "ok" for d in
+               drive_watchdog(wd, 1.0, mults, warmup=2, steps=5))

@@ -1,0 +1,380 @@
+"""Resilience subsystem: failure models, closed-form goodput vs seeded
+Monte Carlo, Young-Daly optimality, straggler perturbation (backend
+parity), elastic re-shard costing, resilience-aware DSE ranking, and
+Chakra failure/restore stamping with the STG4xx trace checks."""
+import json
+import math
+
+import pytest
+
+import repro.configs as configs
+from repro import Scenario, TPU_V5E
+from repro.analysis import check_trace, check_trace_dir
+from repro.core.dse import DSEPoint, rank_points, score_resilience
+from repro.core.topology import h100_hgx_pod, tpu_v5e_pod
+from repro.ft import (CkptTier, FailureModel, ResilienceSpec, StragglerModel,
+                      elastic_reshard, expected_goodput, overhead_curve,
+                      peer_goodput, replay_goodput, score_point, shrink_cfg,
+                      state_bytes, young_daly_interval)
+
+SMOKE = configs.get("granite-34b").smoke
+POD = h100_hgx_pod(2, node_mtbf=40e3)
+# deliberately slow tier: large C/R amplify the storage-vs-peer
+# asymmetry so ranking flips are unambiguous on tiny smoke state
+SLOW = CkptTier("slow_fs", write_bw=1e4, read_bw=1e4, restart_latency=30.0)
+
+
+def _scenario(**par):
+    return (Scenario(SMOKE).train(batch=16, seq=256).cluster(POD)
+            .parallel(**par))
+
+
+# ---- failure model --------------------------------------------------------
+
+def test_failure_model_superposition_and_attribution():
+    m = ResilienceSpec(mtbf={"chip": 30e3, "nvlink": 50e3}) \
+        .failure_model(POD, 16)
+    names = {d.name: d for d in m.domains}
+    assert names["chip"].units == 16 and names["chip"].ranks_lost == 1
+    assert names["nvlink"].units == 2 and names["nvlink"].ranks_lost == 8
+    assert m.rate == pytest.approx(16 / 30e3 + 2 / 50e3)
+    assert m.system_mtbf == pytest.approx(1 / m.rate)
+    tr = m.sample(200 * m.system_mtbf, seed=0)
+    assert len(tr.events) > 100
+    assert list(tr.times()) == sorted(tr.times())
+    assert {e.domain for e in tr.events} == {"chip", "nvlink"}
+    # deterministic in the seed, different across seeds
+    assert m.sample(1e5, seed=3).times() == m.sample(1e5, seed=3).times()
+    assert m.sample(1e5, seed=3).times() != m.sample(1e5, seed=4).times()
+
+
+def test_tier_mtbf_annotations_via_factories():
+    pod = h100_hgx_pod(4, node_mtbf=1e5, rail_mtbf=2e5)
+    by = {t.name: t.mtbf for t in pod.tiers}
+    assert by == {"nvlink": 1e5, "ib": 2e5}
+    tpu = tpu_v5e_pod(2, slice_mtbf=5e4)
+    assert [t.mtbf for t in tpu.tiers] == [5e4, None]
+    with pytest.raises(ValueError, match="mtbf"):
+        h100_hgx_pod(2, node_mtbf=-1.0)
+    with pytest.raises(ValueError, match="unknown tiers"):
+        ResilienceSpec(mtbf={"nope": 1e4}).failure_model(POD, 16)
+
+
+# ---- closed form vs Monte Carlo (acceptance: <2% on 3 archs) --------------
+
+@pytest.mark.parametrize("arch", ["granite-34b", "gemma2-27b", "qwen3-14b"])
+def test_closed_form_goodput_matches_monte_carlo(arch):
+    sc = (Scenario(configs.get(arch).smoke).train(batch=8, seq=128)
+          .cluster(POD).parallel(dp=2, tp=2, pp=2, microbatches=4,
+                                 fsdp=True))
+    tr = sc.trace()
+    spec = ResilienceSpec(mtbf={"chip": 20e3, "nvlink": 40e3}, ckpt=SLOW,
+                          recovery="storage")
+    hw = sc._effective_hw(TPU_V5E)
+    rep = score_point(sc.cfg, tr.simulate(hw), tr.memory(), spec, hw)
+    assert rep.recovery == "storage" and 0 < rep.goodput < 1
+    model = spec.failure_model(POD, sc.cfg.world)
+    trace = model.sample(3000 * model.system_mtbf, seed=spec.seed)
+    mc = replay_goodput(trace, rep.interval, rep.ckpt_cost, rep.restore_cost)
+    assert len(mc.events) > 1000
+    assert mc.goodput == pytest.approx(rep.goodput, rel=0.02)
+
+
+def test_young_daly_is_argmin_of_sampled_overhead_curve():
+    sc = _scenario(tp=4, pp=4, microbatches=8)
+    tr = sc.trace()
+    spec = ResilienceSpec(mtbf={"chip": 20e3}, ckpt=SLOW)
+    hw = sc._effective_hw(TPU_V5E)
+    rep = score_point(sc.cfg, tr.simulate(hw), tr.memory(), spec, hw)
+    i_yd = rep.interval
+    assert i_yd == pytest.approx(
+        young_daly_interval(rep.ckpt_cost, rep.system_mtbf))
+    model = spec.failure_model(POD, sc.cfg.world)
+    # ONE shared trace for every candidate: common random numbers make
+    # the sampled argmin a low-variance estimate of the true optimum
+    trace = model.sample(2000 * model.system_mtbf, seed=1)
+    cands = [f * i_yd for f in (0.25, 0.5, 1.0, 2.0, 4.0)]
+    curve = overhead_curve(trace, cands, rep.ckpt_cost, rep.restore_cost)
+    best = min(curve, key=lambda kv: kv[1])[0]
+    assert best == pytest.approx(i_yd)
+
+
+def test_goodput_closed_form_degenerate_cases():
+    assert expected_goodput(100.0, rate=0.0, ckpt_cost_s=10.0,
+                            restore_cost_s=50.0) == pytest.approx(100 / 110)
+    assert peer_goodput(0.0, 100.0) == 1.0
+    assert young_daly_interval(10.0, math.inf) == math.inf
+    with pytest.raises(ValueError):
+        expected_goodput(0.0, rate=1e-3, ckpt_cost_s=1.0, restore_cost_s=1.0)
+    with pytest.raises(ValueError):
+        ResilienceSpec(mtbf={})
+    with pytest.raises(ValueError, match="recovery"):
+        ResilienceSpec(mtbf=1e4, recovery="magic")
+
+
+# ---- straggler perturbation (parity by construction) ----------------------
+
+def test_straggler_perturbation_backend_parity():
+    sm = StragglerModel(slow_fraction=0.3, slowdown=1.8, seed=3)
+    times = {}
+    for backend in ("compiled", "sympy"):
+        tr = (_scenario(dp=2, tp=2, pp=2, microbatches=4)
+              .with_backend(backend).trace())
+        base = tr.simulate()
+        slow = tr.simulate(perturb=sm)
+        ident = tr.simulate(perturb=(1.0, 1.0))
+        assert ident.step_time == base.step_time      # bit-identical
+        assert slow.step_time > base.step_time
+        times[backend] = (base.step_time, slow.step_time)
+    assert times["compiled"] == times["sympy"]
+
+
+def test_straggler_model_determinism_and_stage_max():
+    sm = StragglerModel(slow_fraction=0.5, slowdown=2.0, seed=7)
+    assert sm.multipliers(16) == sm.multipliers(16)
+    assert set(sm.multipliers(64)) == {1.0, 2.0}
+    cfg = _scenario(dp=2, tp=2, pp=2, microbatches=4).cfg
+    per_stage = sm.stage_multipliers(cfg)
+    assert len(per_stage) == cfg.pp
+    # synchronous barrier: each stage is paced by its slowest rank
+    assert all(m in (1.0, 2.0) for m in per_stage)
+    with pytest.raises(ValueError):
+        StragglerModel(slow_fraction=1.5)
+
+
+def test_perturb_rejects_bad_shapes():
+    tr = _scenario(tp=2, pp=2, microbatches=4).trace()
+    with pytest.raises(ValueError, match="pp"):
+        tr.simulate(perturb=(1.0, 1.0, 1.0))
+    with pytest.raises(ValueError, match="> 0"):
+        tr.simulate(perturb=(1.0, -2.0))
+
+
+# ---- elastic re-shard -----------------------------------------------------
+
+def test_shrink_cfg_and_reshard_cost():
+    sc = _scenario(dp=4, tp=2, pp=2, microbatches=4, fsdp=True)
+    plan = elastic_reshard(lambda: sc.builder().graph, sc.env(), sc.cfg,
+                           k=8, hw=sc._effective_hw(TPU_V5E),
+                           mem=sc.trace().memory())
+    assert plan.old_world == 16 and plan.new_world == 8
+    assert plan.cfg.degree("dp") == 2 and plan.cfg.world == 8
+    # FSDP shards grow when dp shrinks: bytes move, time is charged
+    assert plan.reshard_bytes > 0 and plan.reshard_time > 0
+    assert plan.dist_report is not None
+
+    # replicated dp: shrink is free (survivors already hold full state)
+    sc2 = _scenario(dp=4, tp=2, pp=2, microbatches=4)
+    plan2 = elastic_reshard(lambda: sc2.builder().graph, sc2.env(), sc2.cfg,
+                            k=8, hw=sc2._effective_hw(TPU_V5E),
+                            mem=sc2.trace().memory())
+    assert plan2.reshard_bytes == 0 and plan2.reshard_time == 0
+
+    with pytest.raises(ValueError):
+        shrink_cfg(sc.cfg, 16)               # nothing left
+    with pytest.raises(ValueError):
+        shrink_cfg(sc.cfg, 13)               # < one model replica survives
+    with pytest.raises(ValueError):
+        shrink_cfg(_scenario(tp=2, pp=2, microbatches=4).cfg, 1)  # no dp
+
+
+# ---- DSE ranking ----------------------------------------------------------
+
+def _points(spec, hw, *cfg_kw):
+    pts = []
+    for kw in cfg_kw:
+        sc = _scenario(**kw)
+        tr = sc.trace()
+        pts.append(DSEPoint(cfg=sc.cfg, sim=tr.simulate(hw),
+                            mem=tr.memory(), label=sc.cfg.describe()))
+    score_resilience(pts, spec, hw)
+    return pts
+
+
+def test_effective_goodput_flips_step_time_winner():
+    """tp x pp-heavy wins on raw step time; dp-heavy (peer-recoverable,
+    no checkpoint/rewind overhead) wins once failures are priced in."""
+    spec = ResilienceSpec(mtbf={"chip": 20e3}, ckpt=SLOW)
+    hw = _scenario(dp=16)._effective_hw(TPU_V5E)
+    pts = _points(spec, hw,
+                  dict(tp=4, pp=4, microbatches=2),       # model-parallel
+                  dict(dp=16))                            # replicated
+    mp, dp = pts
+    assert mp.resilience.recovery == "storage"
+    assert dp.resilience.recovery == "peer"
+    assert mp.sim.step_time < dp.sim.step_time            # raw winner: mp
+    rank_points(pts, "step_time")
+    assert pts[0].label == mp.label
+    rank_points(pts, "effective_goodput")
+    assert pts[0].label == dp.label                       # flipped
+    assert dp.effective_step_time < mp.effective_step_time
+    with pytest.raises(ValueError):
+        rank_points(pts, "tokens")
+
+
+def test_sweep_rank_by_effective_goodput():
+    sc = (Scenario(SMOKE).train(batch=8, seq=128).cluster(POD)
+          .resilience(mtbf={"chip": 20e3}, ckpt=SLOW))
+    res = sc.sweep(8, max_pp=2, rank_by="effective_goodput")
+    assert res and all(p.resilience is not None for p in res)
+    effs = [p.effective_step_time for p in res]
+    assert effs == sorted(effs)
+    assert "goodput" in res[0].row()
+    with pytest.raises(ValueError, match="rank_by"):
+        sc.sweep(8, rank_by="bogus")
+    with pytest.raises(ValueError, match="resilience"):
+        Scenario(SMOKE).train(batch=8, seq=128).sweep(
+            8, rank_by="effective_goodput")
+
+
+def test_failure_free_sweep_is_bit_identical():
+    """The resilience-free path must not move by a single bit."""
+    base = Scenario(SMOKE).train(batch=8, seq=128).cluster(POD)
+    plain = base.sweep(8, max_pp=2)
+    scored = base.resilience(mtbf=50e3).sweep(8, max_pp=2)
+    assert [(p.label, p.sim.step_time, p.mem.peak_bytes) for p in plain] == \
+           [(p.label, p.sim.step_time, p.mem.peak_bytes) for p in scored]
+    # and simulate() with no perturb is the untouched code path
+    tr = base.parallel(dp=2, tp=2, pp=2, microbatches=4).trace()
+    assert tr.simulate().step_time == tr.simulate(perturb=None).step_time
+
+
+def test_serving_sweep_rank_by_effective_goodput():
+    job = (Scenario(SMOKE).cluster(POD)
+           .resilience(mtbf={"chip": 5e3}, ckpt="local_ssd")
+           .prefill(batch=4, seq=256).generation(out_tokens=16))
+    pts = job.sweep(8, max_pp=2, rank_by="effective_goodput")
+    assert pts and all(p.resilience is not None for p in pts)
+    effs = [p.effective_tokens_per_s for p in pts]
+    assert effs == sorted(effs, reverse=True)
+    assert all(math.isinf(p.resilience.interval) for p in pts)
+
+
+# ---- compiled state_bytes parity ------------------------------------------
+
+def test_compiled_state_bytes_matches_memory_report():
+    from repro.core.assemble import total_layers
+    from repro.core.compiled import CompiledBackend
+    for kw in (dict(dp=2, tp=2, pp=2, microbatches=4, fsdp=True),
+               dict(dp=4, pp=2, microbatches=2, zero1=True),
+               dict(tp=2, pp=4, microbatches=4)):
+        sc = _scenario(**kw)
+        be = CompiledBackend(lambda: sc.builder().graph, sc.env(),
+                             n_layers=total_layers(SMOKE))
+        assert be.state_bytes(sc.cfg) == \
+            state_bytes(sc.trace().memory())
+
+
+# ---- Chakra stamping + STG4xx ---------------------------------------------
+
+RSPEC = ResilienceSpec(mtbf={"chip": 3e3, "nvlink": 5e3}, ckpt="local_ssd",
+                       recovery="storage")
+
+
+def _stamped_dir(tmp_path):
+    sc = (Scenario(SMOKE).train(batch=8, seq=128).cluster(POD)
+          .resilience(RSPEC).parallel(dp=2, tp=2, pp=2, microbatches=4))
+    tr = sc.trace()
+    n = tr.export_chakra(str(tmp_path), resilience=True,
+                         resilience_steps=20_000_000)
+    assert n == 8
+    return tr
+
+
+def test_chakra_stamping_roundtrip(tmp_path):
+    tr = _stamped_dir(tmp_path)
+    rep, events = tr.resilience_events(steps=20_000_000)
+    assert events and rep.recovery == "storage"
+    man = json.load(open(tmp_path / "manifest.json"))
+    assert man["resilience"]["events"] == len(events)
+    assert man["resilience"]["recovery"] == "storage"
+    out = check_trace_dir(str(tmp_path))
+    assert out.ok, out.render()
+    body = json.load(open(tmp_path / "rank0.json"))
+    marks = [nd for nd in body["nodes"]
+             if nd.get("attrs", {}).get("phase") == "resilience"]
+    assert len(marks) == 2 * len(events)
+    kinds = [nd["attrs"]["kind"] for nd in marks]
+    assert kinds == ["failure", "restore"] * len(events)
+    # ckpt_step monotone, times monotone
+    cks = [nd["attrs"]["ckpt_step"] for nd in marks]
+    assert cks == sorted(cks)
+    # exports WITHOUT resilience stay byte-identical: no markers, no
+    # manifest key
+    plain = (Scenario(SMOKE).train(batch=8, seq=128).cluster(POD)
+             .parallel(dp=2, tp=2, pp=2, microbatches=4).trace())
+    d2 = tmp_path / "plain"
+    plain.export_chakra(str(d2))
+    man2 = json.load(open(d2 / "manifest.json"))
+    assert "resilience" not in man2
+    body2 = json.load(open(d2 / "rank0.json"))
+    assert not [nd for nd in body2["nodes"]
+                if nd.get("attrs", {}).get("phase") == "resilience"]
+
+
+def _mutate_rank0(tmp_path, fn):
+    f = tmp_path / "rank0.json"
+    body = json.load(open(f))
+    fn(body)
+    json.dump(body, open(f, "w"))
+
+
+def _marks(body):
+    return [nd for nd in body["nodes"]
+            if nd.get("attrs", {}).get("phase") == "resilience"]
+
+
+def test_stg401_epoch_order(tmp_path):
+    _stamped_dir(tmp_path)
+
+    def swap_epochs(body):
+        ms = _marks(body)
+        ms[0]["attrs"]["epoch"], ms[2]["attrs"]["epoch"] = \
+            ms[2]["attrs"]["epoch"], ms[0]["attrs"]["epoch"]
+    _mutate_rank0(tmp_path, swap_epochs)
+    out = check_trace_dir(str(tmp_path))
+    assert "STG401" in out.codes()
+
+
+def test_stg402_unmatched_pair(tmp_path):
+    _stamped_dir(tmp_path)
+    _mutate_rank0(tmp_path,
+                  lambda body: body["nodes"].remove(_marks(body)[-1]))
+    out = check_trace_dir(str(tmp_path))
+    assert "STG402" in out.codes()
+
+
+def test_stg403_manifest_disagreement(tmp_path):
+    _stamped_dir(tmp_path)
+
+    def drop_pair(body):
+        for nd in _marks(body)[-2:]:
+            body["nodes"].remove(nd)
+    _mutate_rank0(tmp_path, drop_pair)
+    out = check_trace_dir(str(tmp_path))
+    assert "STG403" in out.codes()
+
+
+def test_stg404_ckpt_regression(tmp_path):
+    _stamped_dir(tmp_path)
+
+    def rewind(body):
+        ms = _marks(body)
+        for nd in ms[-2:]:
+            nd["attrs"]["ckpt_step"] = 0
+        ms[0]["attrs"]["ckpt_step"] = 5
+        ms[1]["attrs"]["ckpt_step"] = 5
+    _mutate_rank0(tmp_path, rewind)
+    out = check_trace_dir(str(tmp_path))
+    assert "STG404" in out.codes()
+
+
+def test_check_trace_accepts_stamped_stage_body():
+    sc = (Scenario(SMOKE).train(batch=8, seq=128).cluster(POD)
+          .resilience(RSPEC).parallel(dp=2, pp=2, microbatches=4))
+    body = sc.trace().chakra_stage(0, resilience=True,
+                                   resilience_steps=20_000_000)
+    assert check_trace(body, rank=None, name="stage0").ok
+    marks = [nd for nd in body["nodes"]
+             if nd.get("attrs", {}).get("phase") == "resilience"]
+    assert marks and marks[0]["attrs"]["kind"] == "failure"
