@@ -33,6 +33,8 @@ def _perf_record(results: dict) -> dict:
     if smoke:
         rec["sweep_points_per_sec"] = smoke["sweep"]
         rec["export_ranks_per_sec"] = smoke["export"]
+        if "batched_sweep" in smoke:
+            rec["batched_sweep_points_per_sec"] = smoke["batched_sweep"]
         if "schedule_sweep" in smoke:
             rec["schedule_sweep_points_per_sec"] = smoke["schedule_sweep"]
         if "topology_sweep" in smoke:

@@ -145,6 +145,44 @@ class _EngineCache:
 _engines = _EngineCache()
 
 
+class _BatchedEngineCache:
+    """Process-wide :class:`~repro.core.batched.BatchedBackend` cache.
+
+    Keyed like :class:`_EngineCache` and wrapping its compiled engine
+    for the same key, so structure classes (and their jitted batch
+    kernels) are shared across every ``backend="batched"`` sweep of the
+    same workload binding.  LRU-bounded like the other caches — batch
+    kernels hold device constants, so unbounded growth would pin
+    memory across a long interactive DSE session."""
+
+    def __init__(self, maxsize: int = 8):
+        self.maxsize = maxsize
+        self._store: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+
+    def engine(self, spec: ModelSpec, mode: str, env: Env):
+        from .core.batched import BatchedBackend
+        key = (spec, mode, env.signature())
+        base = _engines.engine(spec, mode, env)
+        with self._lock:
+            hit = self._store.get(key)
+            if hit is not None and hit.engine is base:
+                self._store.move_to_end(key)
+                return hit
+            eng = BatchedBackend(base)
+            self._store[key] = eng
+            while len(self._store) > self.maxsize:
+                self._store.popitem(last=False)
+            return eng
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+
+
+_batched_engines = _BatchedEngineCache()
+
+
 def _cfg_key(cfg: ParallelCfg) -> tuple:
     """Hashable identity of a full parallel config (series cache key)."""
     return (tuple(sorted(cfg.axes.items())), cfg.dp_axis, cfg.tp_axis,
@@ -201,7 +239,8 @@ def compiled_cache_stats() -> dict:
     """Aggregate structure-class stats over all cached compiled engines."""
     with _engines._lock:
         engines = list(_engines._store.values())
-    agg = {"engines": len(engines), "classes": 0, "compiles": 0, "hits": 0}
+    agg = {"engines": len(engines), "classes": 0, "compiles": 0, "hits": 0,
+           "batched_engines": len(_batched_engines._store)}
     for e in engines:
         s = e.stats()
         for k in ("classes", "compiles", "hits"):
@@ -212,6 +251,7 @@ def compiled_cache_stats() -> dict:
 def clear_graph_cache() -> None:
     _cache.clear()
     _engines.clear()
+    _batched_engines.clear()
     _series.clear()
 
 
@@ -240,8 +280,9 @@ class Scenario:
     def __post_init__(self):
         if self.mode not in ("train", "prefill", "decode"):
             raise ValueError(f"mode {self.mode!r} not in train|prefill|decode")
-        if self.backend not in ("compiled", "sympy"):
-            raise ValueError(f"backend {self.backend!r} not in compiled|sympy")
+        if self.backend not in ("compiled", "sympy", "batched"):
+            raise ValueError(
+                f"backend {self.backend!r} not in compiled|sympy|batched")
 
     # ---- workload shape -------------------------------------------------
     def train(self, *, batch: int, seq: int) -> "Scenario":
@@ -376,9 +417,12 @@ class Scenario:
 
     def with_backend(self, backend: str) -> "Scenario":
         """Select the evaluation backend: ``"compiled"`` (default —
-        lambdified numeric cost programs, structure-class cached) or
-        ``"sympy"`` (the reference per-op substitution path).  Both
-        produce identical workloads (tests/test_backend_parity.py)."""
+        lambdified numeric cost programs, structure-class cached),
+        ``"sympy"`` (the reference per-op substitution path), or
+        ``"batched"`` (whole-sweep JAX array replay — same single-point
+        behavior as compiled; :meth:`sweep` evaluates configs in
+        batches).  All produce identical workloads
+        (tests/test_backend_parity.py, tests/test_batched_parity.py)."""
         return replace(self, backend=backend)
 
     def resilience(self, spec: Optional[ResilienceSpec] = None, *,
@@ -478,6 +522,7 @@ class Scenario:
               algorithms: Optional[dict] = None,
               rank_by: str = "step_time",
               resilience: Optional[ResilienceSpec] = None,
+              search: str = "full",
               **enum_kw) -> SweepResult:
         """One-shot DSE over every strategy for ``world`` devices (Fig 8).
 
@@ -509,7 +554,14 @@ class Scenario:
         expected goodput under failures; ``rank_by="effective_goodput"``
         then orders by ``step_time / goodput`` — peer-recoverable
         (replicated-dp) configs pay no checkpoint/rewind overhead, so
-        the resilience-aware winner can differ from the step-time one."""
+        the resilience-aware winner can differ from the step-time one.
+
+        ``backend="batched"`` (``.with_backend("batched")``) evaluates
+        whole structure classes at once on the JAX array backend;
+        ``search="pareto"`` returns only the (step_ms, peak_gb,
+        effective_step_ms) Pareto front, and ``search="bnb"`` finds that
+        same exact front by branch-and-bound over the config lattice,
+        visiting a small fraction of it (``SweepResult.visited``)."""
         env = self.env()
         hw = self._effective_hw(hw)
         if resilience is None:
@@ -522,7 +574,8 @@ class Scenario:
         # picks, mirroring Trace.simulate(algorithms=...)
         algos = dict(self.algorithms)
         algos.update(algorithms or {})
-        if workers and workers > 1 and executor == "process":
+        if (workers and workers > 1 and executor == "process"
+                and self.backend != "batched" and search == "full"):
             return self._sweep_processes(world, hw, env, workers,
                                          mem_limit_gb=mem_limit_gb,
                                          recompute=recompute,
@@ -530,15 +583,19 @@ class Scenario:
                                          rank_by=rank_by,
                                          resilience=resilience, **enum_kw)
         src = _cache.builder(self.spec, self.mode)      # one assembly/mode
-        engine = (_engines.engine(self.spec, self.mode, env)
-                  if self.backend == "compiled" else None)
+        if self.backend == "batched":
+            engine = _batched_engines.engine(self.spec, self.mode, env)
+        elif self.backend == "compiled":
+            engine = _engines.engine(self.spec, self.mode, env)
+        else:
+            engine = None
         return dse_sweep(lambda: src.clone().graph, env, world, hw,
                          n_layers=total_layers(self.spec),
                          mem_limit_gb=mem_limit_gb, recompute=recompute,
                          name=self.spec.name, backend=self.backend,
                          engine=engine, workers=workers,
                          algorithms=algos or None, rank_by=rank_by,
-                         resilience=resilience, **enum_kw)
+                         resilience=resilience, search=search, **enum_kw)
 
     def _sweep_processes(self, world: int, hw: HardwareProfile, env: Env,
                          workers: int, *, mem_limit_gb, recompute,
@@ -610,7 +667,7 @@ def _sweep_chunk_worker(sc: "Scenario", hw: HardwareProfile, items: list,
 
     env = sc.env()
     engine = (_engines.engine(sc.spec, sc.mode, env)
-              if sc.backend == "compiled" else None)
+              if sc.backend in ("compiled", "batched") else None)
     src = _cache.builder(sc.spec, sc.mode)
     return [(idx, evaluate_or_skip(
                 cfg, env=env, hw=hw, n_layers=total_layers(sc.spec),
@@ -679,7 +736,7 @@ class Trace:
         if self._workload is None:
             sc = self.scenario
             name = sc.name or f"{sc.spec.name}/{sc.mode}"
-            if sc.backend == "compiled":
+            if sc.backend in ("compiled", "batched"):
                 # numeric replay via the shared engine: no per-trace
                 # sympy substitution, and the structure class is reused
                 # across traces/sweeps with the same (spec, mode, env)
@@ -737,7 +794,7 @@ class Trace:
         key = (stage, recompute, master_fp32, grad_dtype)
         if key not in self._mem:
             sc = self.scenario
-            if sc.backend == "compiled":
+            if sc.backend in ("compiled", "batched"):
                 eng = _engines.engine(sc.spec, sc.mode, self.env)
                 self._mem[key] = eng.memory(
                     sc.cfg, stage=stage, recompute=recompute,
@@ -1208,6 +1265,7 @@ class Job:
               mem_limit_gb: Optional[float] = None,
               rank_by: str = "step_time",
               resilience: Optional[ResilienceSpec] = None,
+              search: str = "full",
               **enum_kw) -> list:
         """Serving DSE: rank parallelizations (and, with ``splits``,
         prefill/decode pool partitions) by generated tokens/s.
@@ -1227,7 +1285,14 @@ class Job:
         ``1/(1 + rate*restore)`` — see
         :func:`repro.ft.goodput.score_serving_point`);
         ``rank_by="effective_goodput"`` orders by availability-deflated
-        tokens/s."""
+        tokens/s.
+
+        ``search`` ("full" | "pareto" | "bnb") tunes the per-pool-split
+        prefill sweep: branch-and-bound prunes the prefill config
+        lattice instead of enumerating it, which matters when ``splits``
+        multiplies the number of inner sweeps.  The prefill phase's
+        scenario backend (``.with_backend("batched")``) applies there
+        too."""
         from .core.dse import RANK_MODES, ServingPoint, \
             enumerate_configs, enumerate_pool_splits
         if rank_by not in RANK_MODES:
@@ -1275,7 +1340,8 @@ class Job:
                                      f"partition world={world}")
                 for n in toks:
                     pt = self._best_split_point(wp, wd, n, hw,
-                                                mem_limit_gb, enum_kw)
+                                                mem_limit_gb, enum_kw,
+                                                search=search)
                     if pt is not None:
                         points.append(pt)
         if resilience is not None:
@@ -1312,7 +1378,8 @@ class Job:
             for p in self.phases))
 
     def _best_split_point(self, wp: int, wd: int, n: int,
-                          hw: HardwareProfile, mem_limit_gb, enum_kw):
+                          hw: HardwareProfile, mem_limit_gb, enum_kw,
+                          search: str = "full"):
         """Optimize one (prefill_world, decode_world) partition.
 
         The metrics decompose — TTFT depends only on the prefill cfg,
@@ -1330,7 +1397,7 @@ class Job:
             return None
         best_pre = None
         for pt in pre_sc.sweep(wp, hw, mem_limit_gb=mem_limit_gb,
-                               **enum_kw):
+                               search=search, **enum_kw):
             if "OOM" not in pt.label:
                 best_pre = pt.cfg
                 break

@@ -1,0 +1,738 @@
+"""Batched JAX evaluation backend: whole-sweep config replay on device.
+
+The compiled backend (repro.core.compiled) replays one config at a time
+in Python/numpy; a Fig-8-style sweep is thousands of structurally
+identical replays that differ only in mesh degrees and microbatch
+counts.  This module lowers each ``CostProgram`` structure class ONCE
+MORE — from per-config numeric replay into dense arrays over a whole
+*batch* of configs — and evaluates step time, bubble fraction, and peak
+memory for the batch with one ``jit``-compiled kernel:
+
+* **Local sizes** — ``CostProgram.batch_tables`` turns the per-tensor
+  partition patterns into a ``[nt, axes]`` exponent table, so the batch
+  of local byte sizes is ``numel / prod(degs ** expo)`` — one
+  integer-power gather for every config at once (the vectorized
+  ``_local``, pinned against ``batch_bind``).
+* **Node durations** — FLOP counts follow the same exponent-table trick
+  (einsum letter axes collapse into summed exponents).  Every exponent
+  table in the bundled archs is 0/1-valued, so the power products lower
+  further into static *subset-product* gathers: all ``2^axes`` degree
+  subset products are built once per batch and each table row reads one
+  column (``_pow_plan`` / ``_subset_products`` — exact f64 integer
+  arithmetic, no ``pow``).  The byte-access / memory-event selection
+  tables are ~99% zeros, so they ship as COO triplets and reduce via
+  ``segment_sum``; the dense busy-group contraction
+  (``[B, entries] x [groups, entries]``) stays on the Pallas reduction
+  kernel (:func:`repro.kernels.ops.cost_reduce` — MXU-tiled on TPU,
+  exact float64 jnp contraction as the CPU/CI reference).
+* **Two-stream scheduling** — the reference ``simulate._schedule`` list
+  scheduler becomes one ``lax.scan`` over the flattened slot-group
+  sequence: dependencies resolve positionally *within* a group (each
+  reference ``_schedule`` call starts a fresh ``finish`` dict, so
+  cross-group deps are structurally zero), and group spans are read off
+  the scanned stream frees at static group-end positions.
+* **Pipeline replay** — gpipe / 1f1b / interleaved timelines are
+  duration-independent DAGs, so the event order is planned once in
+  Python and replayed as a second ``lax.scan`` (max-plus recurrence over
+  per-(kind, chunk) spans).  ``zb-h1`` backfills weight-grads into
+  duration-dependent gaps, so those configs fall back to the per-config
+  compiled path (as do topology profiles and per-collective algorithm
+  overrides, whose lowering depends on axis placement).
+* **Memory** — the activation event sweep groups by unique event time;
+  within a tie group the reference sorts deltas ascending, so every
+  intermediate prefix sum is bounded by the two group-boundary sums and
+  the batched peak (max over a cumulative sum of per-group signed
+  count-matrix contractions) is exact up to float association.
+
+Microbatch count is a *batched input* for pp = 1 (slot durations are
+microbatch-independent; ``step = mb * span + opt``), so one kernel
+covers the mb dimension of a sweep; pipelined groups key on
+(schedule, mb) because the replay plan depends on both.
+
+Numerics: results must match the compiled backend within rel 1e-6 on
+CPU, which requires float64 — constructing a :class:`BatchedBackend`
+enables ``jax_enable_x64`` (guarded; see ``_ensure_x64``).  The
+``dtype`` hook exists so the regression test can demonstrate float32 is
+NOT sufficient.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+from .compiled import _PER_RANK_COLLS, _RING_COLLS, CompiledBackend, \
+    CostProgram
+from .distribute import ParallelCfg
+from .memory import MemoryReport
+from .schedules import FWD, _dep_key, build_schedule, inflight_factor
+from .simulate import SimResult
+from .tensor import DTYPE_BYTES
+
+__all__ = ["BatchedBackend", "REPLAYABLE_SCHEDULES"]
+
+# schedules whose replay order is duration-independent (zb-h1 backfills
+# weight-grad slots into gaps whose existence depends on the durations)
+REPLAYABLE_SCHEDULES = ("gpipe", "1f1b", "interleaved")
+
+
+def _ensure_x64() -> None:
+    """The 1e-6 parity budget needs float64; jax defaults to 32."""
+    import jax
+    if not jax.config.jax_enable_x64:
+        jax.config.update("jax_enable_x64", True)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _hw_sig(hw) -> tuple:
+    return (hw.peak_flops, hw.hbm_bw, hw.link_bw,
+            tuple(sorted(hw.link_bw_axis.items())), hw.link_latency,
+            tuple(sorted(hw.efficiency.items())))
+
+
+def _coo(mat: np.ndarray, dtype) -> tuple:
+    """Row-major COO triplets (rows, cols, vals) of a selection table."""
+    rows, cols = np.nonzero(mat)
+    return (np.asarray(rows, np.intp), np.asarray(cols, np.intp),
+            np.asarray(mat[rows, cols], dtype))
+
+
+def _pow_plan(expo: np.ndarray) -> tuple:
+    """Static lowering of a 0/1 exponent table to subset-product ids.
+
+    Exponents are 0/1 in practice (a tensor is either sharded along an
+    axis or not), so ``prod_a degs**expo[r, a]`` only takes one of the
+    2^A axis-subset products — precompute the subset id per row and the
+    kernel gathers from a tiny [B, 2^A] product table instead of doing
+    elementwise ``**`` (libm pow dominates the batch kernel on CPU).
+    Returns ``(ids, None)``; tables with an exponent > 1 (not seen in
+    any bundled arch) fall back to ``(None, expo_f64)``."""
+    if expo.size and expo.max(initial=0) > 1:
+        return None, np.asarray(expo, np.float64)
+    ids = np.zeros(expo.shape[0], np.intp)
+    for a in range(expo.shape[1]):
+        ids |= (expo[:, a] > 0.5).astype(np.intp) << a
+    return ids, None
+
+
+def _pow_prod(jnp, degs, subs, plan):
+    """``out[b, r] = prod_a degs[b, a] ** expo[r, a]`` via the
+    :func:`_pow_plan` lowering: a [B, R] gather from the precomputed
+    axis-subset products ``subs`` — exact f64 integer arithmetic."""
+    ids, expo = plan
+    if ids is not None:
+        return subs[:, ids]
+    return jnp.prod(degs[:, None, :] ** expo[None], axis=2)
+
+
+def _subset_products(jnp, degs):
+    """All 2^A axis-subset products of the [B, A] degree columns."""
+    cols = [jnp.ones(degs.shape[0], degs.dtype)]
+    for a in range(degs.shape[1]):
+        cols = cols + [c * degs[:, a] for c in cols]
+    return jnp.stack(cols, axis=1)                      # [B, 2^A]
+
+
+def _seg_reduce(x, coo, nseg: int):
+    """``out[b, r] = sum_nz vals[nz] * x[b, cols[nz]]`` over a COO
+    table — the sparse counterpart of :func:`ops.cost_reduce` for the
+    ~99%-sparse byte-access / memory-event selection tables, O(B*nnz)
+    instead of the dense O(B*R*T)."""
+    import jax
+    rows, cols, vals = coo
+    if rows.shape[0] == 0:
+        return jax.numpy.zeros((x.shape[0], nseg), x.dtype)
+    contrib = x[:, cols] * vals[None]                  # [B, nnz]
+    return jax.ops.segment_sum(contrib.T, rows, num_segments=nseg,
+                               indices_are_sorted=True).T
+
+
+class _ClassKernel:
+    """One jitted evaluator for one (structure class, pipeline layout,
+    schedule point, recompute) group of configs.
+
+    Everything degree-independent is baked into device constants at
+    construction; per-call inputs are the [B, axes] mesh degrees, the
+    [B] microbatch counts (pp = 1 only; static otherwise), and the
+    hardware scalars/per-entry arrays — so changing the profile never
+    retraces."""
+
+    def __init__(self, prog: CostProgram, axes: tuple, pp: int, vstages: int,
+                 schedule: str, microbatches: int, recompute: bool,
+                 dtype=None):
+        _ensure_x64()
+        import jax
+        import jax.numpy as jnp
+        self._jnp = jnp
+        self.prog = prog
+        # pure-pipeline classes have no mesh axes; keep one dummy column
+        # so the [B, axes] gathers/pow-products stay well-formed
+        self.axes = axes = axes or ("_pad",)
+        self.pp = pp = max(1, pp)
+        self.vstages = vstages = max(1, vstages) if pp > 1 else 1
+        self.schedule = schedule
+        self.microbatches = microbatches
+        self.recompute = recompute
+        self.dtype = jnp.dtype(dtype) if dtype is not None else jnp.float64
+        dt = self.dtype
+        A = len(axes)
+        ax_ix = {a: j for j, a in enumerate(axes)}
+        tabs = prog.batch_tables(axes)
+        nt = len(tabs["numel"])
+        lay = prog._layout(pp, vstages)
+        entries = lay.entries
+        E = len(entries)
+
+        # ---- per-entry compute/comm coefficient tables -------------------
+        fnum = np.zeros(E)
+        fexp = np.zeros((E, A))
+        s_ba = np.zeros((E, nt), np.float32)
+        c_kind = np.zeros(E, np.int32)          # 0 compute, 1 sendrecv, 2 coll
+        c_src = np.zeros(E, np.intp)
+        c_gb = np.zeros(E)
+        c_ax = np.zeros(E, np.intp)
+        c_oexp = np.zeros((E, A))
+        c_perrank = np.zeros(E, bool)
+        c_wmode = np.zeros(E, np.int32)         # 0 size, 1 (n-1)/n, 2 2(n-1)/n
+        c_allred = np.zeros(E, bool)
+        self._cats = [e[3] for e in entries]
+        self._bw_axes: list[Optional[str]] = [None] * E
+        for k, e in enumerate(entries):
+            flop, ba_ix, cm = e[8], e[9], e[11]
+            if flop is not None:
+                if flop[0] == "scale":
+                    fnum[k] = flop[1] * tabs["numel"][flop[2]]
+                    fexp[k] = tabs["expo"][flop[2]]
+                else:
+                    f = 2.0
+                    for fval, eaxes in prog._eins_f[flop[1]]:
+                        f *= fval
+                        for a in eaxes:
+                            fexp[k, ax_ix[a]] += 1.0
+                    fnum[k] = f
+            for t in ba_ix:
+                s_ba[k, t] += 1.0
+            if cm is None:
+                continue
+            if cm[0] == "SendRecv":
+                c_kind[k] = 1
+                c_src[k] = cm[1]
+                self._bw_axes[k] = "pp"
+            else:
+                coll, axis, ref, other = cm
+                c_kind[k] = 2
+                c_gb[k] = tabs["gbytes"][ref]
+                c_ax[k] = ax_ix[axis]
+                for a in other:
+                    c_oexp[k, ax_ix[a]] += 1.0
+                c_perrank[k] = coll in _PER_RANK_COLLS
+                c_allred[k] = coll == "AllReduce"
+                if coll == "AllReduce":
+                    c_wmode[k] = 2
+                elif coll in _RING_COLLS or coll == "AllToAll":
+                    c_wmode[k] = 1
+                self._bw_axes[k] = axis
+
+        # ---- slot groups (mirror simulate's per-_schedule-call scoping) --
+        groups: list[list[int]] = []
+        fmap: dict = {}
+        bmap: dict = {}
+        omap: dict = {}
+        if pp <= 1:
+            mbp = [k for k, e in enumerate(entries) if e[4] in ("fwd", "bwd")]
+            if recompute:
+                mbp += [k for k, e in enumerate(entries)
+                        if e[4] == "fwd" and e[11] is None]
+            groups.append(mbp)
+            groups.append([k for k, e in enumerate(entries)
+                           if e[4] == "opt"])
+        else:
+            for s in range(pp):
+                fwd_c: dict = {}
+                bwd_c: dict = {}
+                opt: list = []
+                for k, e in enumerate(entries):
+                    if e[5] != s:
+                        continue
+                    if e[4] == "fwd":
+                        fwd_c.setdefault(e[6], []).append(k)
+                    elif e[4] == "bwd":
+                        bwd_c.setdefault(e[6], []).append(k)
+                    else:
+                        opt.append(k)
+                for c in sorted(set(fwd_c) | set(bwd_c)):
+                    f = fwd_c.get(c, [])
+                    b = bwd_c.get(c, [])
+                    if recompute:
+                        b = b + [k for k in f if entries[k][11] is None]
+                    fmap[(s, c)] = len(groups)
+                    groups.append(f)
+                    bmap[(s, c)] = len(groups)
+                    groups.append(b)
+                omap[s] = len(groups)
+                groups.append(opt)
+        G = len(groups)
+
+        # ---- flatten to one scan sequence with positional within-group
+        #      deps (each reference _schedule call = fresh finish dict) ----
+        seq_entry: list[int] = []
+        seq_group: list[int] = []
+        seq_reset: list[bool] = []
+        seq_deps: list[list[int]] = []
+        glast = np.full(G, -1, np.intp)
+        for g, pos_list in enumerate(groups):
+            uid_last: dict[int, int] = {}
+            for j, k in enumerate(pos_list):
+                e = entries[k]
+                seq_deps.append([uid_last[d] for d in e[12] if d in uid_last])
+                seq_entry.append(k)
+                seq_group.append(g)
+                seq_reset.append(j == 0)
+                uid_last[e[0]] = len(seq_entry) - 1
+                glast[g] = len(seq_entry) - 1
+        K = len(seq_entry)
+        D = max((len(d) for d in seq_deps), default=0) or 1
+        deps = np.full((K, D), -1, np.intp)
+        for i, ds in enumerate(seq_deps):
+            deps[i, :len(ds)] = ds
+        is_comm = np.asarray([entries[k][11] is not None for k in seq_entry])
+        m_comp = np.zeros((G, K), np.float32)
+        m_comm = np.zeros((G, K), np.float32)
+        for i, (k, g) in enumerate(zip(seq_entry, seq_group)):
+            (m_comm if is_comm[i] else m_comp)[g, i] = 1.0
+
+        # ---- pipeline replay plan (duration-independent event DAG) -------
+        if pp > 1:
+            sched = build_schedule(schedule, pp, microbatches, vstages)
+            if sched.splits_backward:
+                raise ValueError(
+                    f"schedule {schedule!r} is not batch-replayable")
+            ev_stage: list[int] = []
+            ev_slot: list[int] = []         # group idx (G = zero-span slot)
+            ev_dep: list[int] = []
+            done: dict = {}
+            ptr = [0] * pp
+            remaining = sum(len(t) for t in sched.timelines)
+            while remaining:
+                progressed = False
+                for s in range(pp):
+                    tl = sched.timelines[s]
+                    while ptr[s] < len(tl):
+                        slot = tl[ptr[s]]
+                        dep = _dep_key(slot, sched.chunks)
+                        if dep is not None and dep not in done:
+                            break
+                        smap = fmap if slot.kind == FWD else bmap
+                        ev_stage.append(s)
+                        ev_slot.append(smap.get((s, slot.vstage), G))
+                        ev_dep.append(done[dep] if dep is not None else -1)
+                        key = ("f" if slot.kind == FWD else "b",
+                               slot.mb, slot.vstage)
+                        done[key] = len(ev_stage) - 1
+                        ptr[s] += 1
+                        remaining -= 1
+                        progressed = True
+                if not progressed:          # pragma: no cover - by design
+                    raise RuntimeError(
+                        f"schedule {schedule!r} replay plan deadlocked")
+            self._ev = (np.asarray(ev_stage, np.intp),
+                        np.asarray(ev_slot, np.intp),
+                        np.asarray(ev_dep, np.intp))
+            # per-stage hosted (fwd+bwd) groups and opt group selectors
+            sg = np.zeros((pp, G), np.float32)
+            og = np.zeros((pp, G), np.float32)
+            for (s, _c), g in fmap.items():
+                sg[s, g] = 1.0
+            for (s, _c), g in bmap.items():
+                sg[s, g] = 1.0
+            for s, g in omap.items():
+                og[s, g] = 1.0
+            self._sg, self._og = jnp.asarray(sg), jnp.asarray(og)
+            self.inflight = inflight_factor(schedule, pp, microbatches,
+                                            vstages, 0)
+        else:
+            self._ev = None
+            self.inflight = inflight_factor(schedule or "1f1b", pp,
+                                            microbatches, vstages, 0)
+
+        # ---- memory lifetime tables (stage 0, peak_memory defaults) ------
+        w_idx, upds, acts = prog._mem_static(pp, vstages, 0)
+        s_w = np.zeros(nt, np.float32)
+        for t in w_idx:
+            s_w[t] += 1.0
+        self._n_upd = U = len(upds)
+        u_m = np.zeros(U)
+        u_g = np.zeros(U)
+        u_sexp = np.zeros((U, A))
+        u_gexp = np.zeros((U, A))
+        gdb = DTYPE_BYTES["fp32"]
+        wnumel = np.asarray(prog._wnumel)
+        for u, (w_t, shard_axes, grad_axes) in enumerate(upds):
+            u_m[u] = wnumel[w_t] * 4
+            u_g[u] = wnumel[w_t] * gdb
+            for a in shard_axes:
+                u_sexp[u, ax_ix[a]] += 1.0
+            for a in grad_axes:
+                u_gexp[u, ax_ix[a]] += 1.0
+        ev_times: dict = {}
+        layer_rows: dict = {}
+        for t, start, end, end_fwd, lyr, is_fused in acts:
+            if is_fused or recompute:
+                end = min(end, end_fwd)
+            ev_times.setdefault(start, []).append((t, 1.0))
+            ev_times.setdefault(end + 1, []).append((t, -1.0))
+            if recompute and lyr is not None and not is_fused:
+                layer_rows.setdefault(lyr, []).append(t)
+        self._n_mev = Gm = len(ev_times)
+        s_mem = np.zeros((Gm, nt), np.float32)
+        for g, time in enumerate(sorted(ev_times)):
+            for t, sign in ev_times[time]:
+                s_mem[g, t] += sign
+        self._n_layer = L = len(layer_rows)
+        s_layer = np.zeros((L, nt), np.float32)
+        for r, lyr in enumerate(sorted(layer_rows)):
+            for t in layer_rows[lyr]:
+                s_layer[r, t] += 1.0
+
+        # static subset-product plans for the pow-product tables
+        plan = lambda m: tuple(                     # noqa: E731
+            jnp.asarray(a) if a is not None else None
+            for a in _pow_plan(np.asarray(m)))
+        self._plans = {
+            "expo": plan(tabs["expo"]), "fexp": plan(fexp),
+            "c_oexp": plan(c_oexp), "u_sexp": plan(u_sexp),
+            "u_gexp": plan(u_gexp),
+        }
+
+        # ---- device constants --------------------------------------------
+        f = lambda a: jnp.asarray(a, dtype=dt)      # noqa: E731
+        # the selection tables are ~99% zeros (a handful of tensors per
+        # entry / memory event), so they ship as COO triplets and reduce
+        # via segment-sum instead of a dense [B,T]x[R,T] contraction
+        coo = lambda m: tuple(                      # noqa: E731
+            jnp.asarray(a) for a in _coo(m, dt))
+        self._c = {
+            "numel": f(tabs["numel"]), "dbytes": f(tabs["dbytes"]),
+            "fnum": f(fnum),
+            "s_ba": coo(s_ba), "c_kind": jnp.asarray(c_kind),
+            "c_src": jnp.asarray(c_src), "c_gb": f(c_gb),
+            "c_ax": jnp.asarray(c_ax),
+            "c_perrank": jnp.asarray(c_perrank),
+            "c_wmode": jnp.asarray(c_wmode),
+            "c_allred": jnp.asarray(c_allred),
+            "seq_entry": jnp.asarray(np.asarray(seq_entry, np.intp)),
+            "seq_reset": jnp.asarray(np.asarray(seq_reset)),
+            "seq_is_comm": jnp.asarray(is_comm),
+            "deps": jnp.asarray(deps),
+            "glast": jnp.asarray(glast),
+            "m_comp": jnp.asarray(m_comp), "m_comm": jnp.asarray(m_comm),
+            "s_w": jnp.asarray(s_w), "u_m": f(u_m), "u_g": f(u_g),
+            "s_mem": coo(s_mem), "s_layer": coo(s_layer),
+        }
+        self._K, self._G, self._E = K, G, E
+        self._g_mb, self._g_opt = (0, 1) if pp <= 1 else (None, None)
+        self._hw_cache: dict = {}
+        self._fn = jax.jit(self._eval)
+
+    # ---- per-profile entry arrays (cached; no retrace on change) ---------
+    def _hw_arrays(self, hw):
+        sig = _hw_sig(hw)
+        hit = self._hw_cache.get(sig)
+        if hit is not None:
+            return hit
+        jnp, dt = self._jnp, self.dtype
+        eff = hw.efficiency
+        eff_e = np.asarray([eff.get(c, 0.9) for c in self._cats])
+        bw_e = np.asarray([hw.link_bw_axis.get(a, hw.link_bw)
+                           if a is not None else 1.0
+                           for a in self._bw_axes])
+        # device-resident, so a warm run() does no per-call device_put
+        out = (jnp.asarray(eff_e, dt), jnp.asarray(bw_e, dt),
+               jnp.asarray(hw.peak_flops, dt), jnp.asarray(hw.hbm_bw, dt),
+               jnp.asarray(hw.link_latency, dt))
+        if len(self._hw_cache) > 8:
+            self._hw_cache.clear()
+        self._hw_cache[sig] = out
+        return out
+
+    # ---- the jitted batch evaluator --------------------------------------
+    def _eval(self, degs, mbs, eff_e, bw_e, peak, hbm, lat):
+        import jax
+        from ..kernels.ops import cost_reduce
+        jnp = self._jnp
+        c = self._c
+        B = degs.shape[0]
+        dt = self.dtype
+
+        # local sizes: the vectorized CostProgram._local
+        subs = _subset_products(jnp, degs)                  # [B, 2^A]
+        denom = _pow_prod(jnp, degs, subs, self._plans["expo"])
+        ln = c["numel"][None] / denom                       # [B, nt]
+        lb = ln * c["dbytes"][None]
+
+        # per-entry durations
+        fden = _pow_prod(jnp, degs, subs, self._plans["fexp"])
+        flops = c["fnum"][None] / fden                      # [B, E]
+        ba = _seg_reduce(lb, c["s_ba"], self._E)            # [B, E]
+        t_flops = flops / (peak * eff_e[None])
+        dur_comp = jnp.maximum(t_flops, ba / hbm)
+        n = degs[:, c["c_ax"]]                              # [B, E]
+        odeg = _pow_prod(jnp, degs, subs, self._plans["c_oexp"])
+        full = c["c_gb"][None] / odeg
+        size = jnp.where(c["c_perrank"][None], full, full / n)
+        frac = (n - 1.0) / n
+        wire = jnp.where(c["c_wmode"][None] == 1, size * frac,
+                         jnp.where(c["c_wmode"][None] == 2,
+                                   size * 2.0 * frac, size))
+        steps = jnp.where(c["c_allred"][None], 2.0, 1.0) * (n - 1.0)
+        dur_coll = jnp.where(n > 1.0, wire / bw_e[None] + steps * lat, 0.0)
+        dur_sr = lb[:, c["c_src"]] / bw_e[None] + lat
+        dur = jnp.where(c["c_kind"][None] == 0, dur_comp,
+                        jnp.where(c["c_kind"][None] == 1, dur_sr, dur_coll))
+
+        # two-stream scan over the flattened slot-group sequence
+        dur_bk = dur[:, c["seq_entry"]]                     # [B, K]
+        dur_seq = dur_bk.T                                  # [K, B]
+        zero = jnp.zeros(B, dt)
+
+        def body(carry, xs):
+            fc, fm, fin = carry
+            i, dur_k, comm_k, reset_k, deps_k = xs
+            fc = jnp.where(reset_k, 0.0, fc)
+            fm = jnp.where(reset_k, 0.0, fm)
+            dv = jnp.where((deps_k >= 0)[:, None],
+                           fin[jnp.maximum(deps_k, 0)], 0.0)
+            ready = dv.max(axis=0)
+            endc = jnp.maximum(ready, fc) + dur_k
+            endm = jnp.maximum(ready, fm) + dur_k
+            end = jnp.where(comm_k, endm, endc)
+            fc = jnp.where(comm_k, fc, endc)
+            fm = jnp.where(comm_k, endm, fm)
+            fin = fin.at[i].set(end)
+            return (fc, fm, fin), (fc, fm)
+
+        K = self._K
+        init = (zero, zero, jnp.zeros((K, B), dt))
+        xs = (jnp.arange(K), dur_seq, c["seq_is_comm"], c["seq_reset"],
+              c["deps"])
+        (_, _, _), (fc_ys, fm_ys) = jax.lax.scan(body, init, xs)
+        frees = jnp.maximum(fc_ys, fm_ys)                   # [K, B]
+        live = c["glast"] >= 0
+        spans = jnp.where(live[:, None],
+                          frees[jnp.maximum(c["glast"], 0)], 0.0)  # [G, B]
+        busy_c = cost_reduce(dur_bk, c["m_comp"])           # [B, G]
+        busy_m = cost_reduce(dur_bk, c["m_comm"])
+
+        if self.pp <= 1:
+            gm, go = self._g_mb, self._g_opt
+            span_mb, span_opt = spans[gm], spans[go]
+            cb, ocb = busy_c[:, gm], busy_c[:, go]
+            mb_, omb = busy_m[:, gm], busy_m[:, go]
+            step = mbs * span_mb + span_opt
+            compute = cb * mbs + ocb
+            comm = mb_ * mbs + omb
+            exposed = (jnp.maximum(0.0, span_mb - cb) * mbs
+                       + jnp.maximum(0.0, span_opt - ocb))
+            bubble = jnp.zeros(B, dt)
+        else:
+            mb = float(self.microbatches)
+            ev_stage, ev_slot, ev_dep = self._ev
+            spans_z = jnp.concatenate([spans, jnp.zeros((1, B), dt)])
+            nev = len(ev_stage)
+
+            def rbody(carry, xs):
+                free, fin = carry
+                i, st, gi, di = xs
+                ready = jnp.where(di >= 0, fin[jnp.maximum(di, 0)], 0.0)
+                end = jnp.maximum(free[st], ready) + spans_z[gi]
+                return (free.at[st].set(end), fin.at[i].set(end)), None
+
+            rinit = (jnp.zeros((self.pp, B), dt), jnp.zeros((nev, B), dt))
+            rxs = (jnp.arange(nev), jnp.asarray(ev_stage),
+                   jnp.asarray(ev_slot), jnp.asarray(ev_dep))
+            (free, _), _ = jax.lax.scan(rbody, rinit, rxs)
+            makespan = free.max(axis=0)                     # [B]
+            o_span = self._og @ spans                       # [pp, B]
+            t_opt = o_span.max(axis=0)
+            step = makespan + t_opt
+            busy_rep = mb * (self._sg @ spans)              # [pp, B]
+            tot = busy_rep.sum(axis=0)
+            bubble = jnp.where(makespan > 0.0,
+                               jnp.maximum(0.0, 1.0 - tot
+                                           / (makespan * self.pp)), 0.0)
+            cb_s = busy_c @ self._sg.T                      # [B, pp]
+            mb_s = busy_m @ self._sg.T
+            exp_g = jnp.maximum(0.0, spans.T - busy_c)      # [B, G]
+            exp_s = exp_g @ self._sg.T
+            ocb_s = busy_c @ self._og.T
+            omb_s = busy_m @ self._og.T
+            osp_s = spans.T @ self._og.T
+            oexp_s = jnp.maximum(0.0, osp_s - ocb_s)
+            compute = (cb_s * mb + ocb_s).max(axis=1)
+            comm = (mb_s * mb + omb_s).max(axis=1)
+            exposed = (exp_s * mb + oexp_s).max(axis=1)
+
+        # memory (stage 0, peak_memory defaults: master fp32, fp32 grads)
+        weights = lb @ c["s_w"].astype(dt)
+        if self._n_upd:
+            sdeg = _pow_prod(jnp, degs, subs, self._plans["u_sexp"])
+            gdeg = _pow_prod(jnp, degs, subs, self._plans["u_gexp"])
+            opt_states = (2.0 * c["u_m"][None] / sdeg).sum(axis=1)
+            master = (c["u_m"][None] / sdeg).sum(axis=1)
+            grads = (c["u_g"][None] / gdeg).sum(axis=1)
+        else:
+            opt_states = master = grads = jnp.zeros(B, dt)
+        if self._n_mev:
+            delta = _seg_reduce(lb, c["s_mem"], self._n_mev)   # [B, Gm]
+            peak_act = jnp.maximum(
+                jnp.cumsum(delta, axis=1).max(axis=1), 0.0)
+        else:
+            peak_act = jnp.zeros(B, dt)
+        if self.recompute and self._n_layer:
+            extra = _seg_reduce(lb, c["s_layer"],
+                                self._n_layer).max(axis=1)
+        else:
+            extra = jnp.zeros(B, dt)
+
+        return {"step": step, "compute": compute, "comm": comm,
+                "exposed": exposed, "bubble": bubble, "weights": weights,
+                "grads": grads, "opt_states": opt_states, "master": master,
+                "peak_act": peak_act, "extra": extra}
+
+    def run_async(self, degs: np.ndarray, mbs: np.ndarray, hw) -> dict:
+        """Dispatch the jitted kernel; values are async jax arrays —
+        converting with ``np.asarray`` waits for them."""
+        jnp = self._jnp
+        eff_e, bw_e, peak, hbm, lat = self._hw_arrays(hw)
+        dt = self.dtype
+        return self._fn(jnp.asarray(degs, dt), jnp.asarray(mbs, dt),
+                        eff_e, bw_e, peak, hbm, lat)
+
+    def run(self, degs: np.ndarray, mbs: np.ndarray, hw) -> dict:
+        out = self.run_async(degs, mbs, hw)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+
+class BatchedBackend:
+    """Batched evaluator over a :class:`CompiledBackend`'s structure
+    classes.  Thread-safe; kernels are cached per (program, pipeline
+    layout, schedule point, recompute) group and reused across sweeps.
+
+    ``dtype`` overrides the evaluation precision (test hook — float32
+    demonstrably breaks the 1e-6 parity budget; leave as None)."""
+
+    def __init__(self, engine: CompiledBackend, *, dtype=None):
+        _ensure_x64()
+        self.engine = engine
+        self.dtype = dtype
+        self._kernels: dict = {}
+        self._lock = threading.Lock()
+        self.batch_sizes: list[int] = []
+        self.points = 0
+
+    def stats(self) -> dict:
+        """Batch accounting for :meth:`SweepResult.summary`."""
+        return {"kernels": len(self._kernels), "points": self.points,
+                "batch_sizes": list(self.batch_sizes)}
+
+    def _kernel(self, prog: CostProgram, axes: tuple, key: tuple
+                ) -> _ClassKernel:
+        with self._lock:
+            kern = self._kernels.get(key)
+            if kern is None:
+                _, pp, vstages, schedule, mb, recompute = key
+                kern = _ClassKernel(prog, axes, pp, vstages,
+                                    schedule or "1f1b", mb, recompute,
+                                    dtype=self.dtype)
+                self._kernels[key] = kern
+            return kern
+
+    def supports(self, cfg: ParallelCfg, hw, algorithms=None) -> bool:
+        """Whether (cfg, hw) evaluates natively: flat profiles without
+        per-collective algorithm overrides, any non-zb schedule.
+        Everything else lowers placement-dependently -> compiled path."""
+        if getattr(hw, "topology", None) is not None or algorithms:
+            return False
+        return max(1, cfg.pp) <= 1 or cfg.schedule in REPLAYABLE_SCHEDULES
+
+    def evaluate_many(self, cfgs: list, hw, *, recompute: bool = False
+                      ) -> list:
+        """Evaluate a batch of configs; returns a list aligned with
+        ``cfgs`` of ``(SimResult, MemoryReport)`` tuples, with ``None``
+        for configs that must fall back to the per-config compiled path
+        (unsupported schedule / profile, or structure-class lowering
+        failure — the fallback re-raises the real error per config)."""
+        out: list = [None] * len(cfgs)
+        if getattr(hw, "topology", None) is not None:
+            return out
+        buckets: dict = {}
+        for i, cfg in enumerate(cfgs):
+            pp = max(1, cfg.pp)
+            if pp > 1 and cfg.schedule not in REPLAYABLE_SCHEDULES:
+                continue
+            try:
+                prog = self.engine.program(cfg)
+            except Exception:
+                continue                        # per-config path reports it
+            vstages = max(1, getattr(cfg, "vstages", 1)) if pp > 1 else 1
+            key = (id(prog), pp, vstages,
+                   cfg.schedule if pp > 1 else "",
+                   cfg.microbatches if pp > 1 else 0, recompute)
+            buckets.setdefault(key, (prog, []))[1].append(i)
+        # dispatch every bucket before harvesting any: the device chews
+        # through kernel i+1 while Python assembles rows for kernel i
+        pend = []
+        for key, (prog, idxs) in buckets.items():
+            axes = tuple(sorted(cfgs[idxs[0]].axes))
+            kern = self._kernel(prog, axes, key)
+            pend.append((kern, idxs, self._dispatch(kern, cfgs, idxs, hw)))
+            self.batch_sizes.append(len(idxs))
+            self.points += len(idxs)
+        for kern, idxs, res in pend:
+            self._harvest(kern, cfgs, idxs, res, out)
+        return out
+
+    def _dispatch(self, kern: _ClassKernel, cfgs: list, idxs: list, hw
+                  ) -> dict:
+        B = len(idxs)
+        Bp = _next_pow2(B)                      # pow2 pad bounds retraces
+        degs = np.ones((Bp, len(kern.axes)))
+        mbs = np.ones(Bp)
+        for j, i in enumerate(idxs):
+            cfg = cfgs[i]
+            degs[j] = [cfg.axes.get(a, 1) for a in kern.axes]
+            mbs[j] = cfg.microbatches
+        return kern.run_async(degs, mbs, hw)
+
+    def _harvest(self, kern: _ClassKernel, cfgs: list, idxs: list,
+                 res: dict, out: list) -> None:
+        B = len(idxs)
+        col = {k: np.asarray(v)[:B].tolist() for k, v in res.items()}
+        for j, i in enumerate(idxs):            # bulk, not 18*B float()
+            cfg = cfgs[i]
+            comm = col["comm"][j]
+            exposed = col["exposed"][j]
+            hidden = max(0.0, comm - exposed)
+            sim = SimResult(
+                step_time=col["step"][j],
+                compute_time=col["compute"][j],
+                comm_time=comm, exposed_comm=exposed,
+                overlap_ratio=(hidden / comm) if comm > 0 else 1.0,
+                bubble_fraction=col["bubble"][j],
+                schedule=getattr(cfg, "schedule", "1f1b"), stages=[])
+            mem = MemoryReport(
+                weights=col["weights"][j],
+                grads=col["grads"][j],
+                opt_states=col["opt_states"][j],
+                master_params=col["master"][j],
+                peak_activation=col["peak_act"][j],
+                inflight_factor=kern.inflight,
+                recompute_extra=col["extra"][j])
+            out[i] = (sim, mem)

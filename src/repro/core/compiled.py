@@ -264,6 +264,61 @@ class CostProgram:
             for i, letters in self._eins.items()}
         self._point_cache.clear()
 
+    # ---- batch lowering (repro.core.batched) -----------------------------
+    def batch_tables(self, axes: tuple) -> dict:
+        """Static coefficient tables for *batched* (vectorized) replay.
+
+        ``axes`` fixes the mesh-axis column order (normally the structure
+        class's sorted axis names).  Returns plain numpy arrays —
+        everything a backend needs to evaluate local sizes for a whole
+        batch of configs at once:
+
+        * ``numel``  — [nt] global element counts (bound coefficients),
+        * ``dbytes`` — [nt] dtype byte widths,
+        * ``gbytes`` — [nt] global byte volumes (``numel * dbytes``),
+        * ``expo``   — [nt, len(axes)] mesh-degree exponents such that
+          ``local_numel = numel / prod(degs ** expo)`` — exactly the
+          ``_prod_degrees`` partition factors, laid out as a dense
+          integer-power table.
+
+        Raises ``ValueError`` if a tensor partitions over an axis not in
+        ``axes`` (the caller sliced the mesh wrong)."""
+        ax_ix = {a: j for j, a in enumerate(axes)}
+        expo = np.zeros((self._nt, len(axes)), dtype=np.float64)
+        for i, pat in enumerate(self._t_part):
+            for a, k in pat:
+                j = ax_ix.get(a)
+                if j is None:
+                    raise ValueError(
+                        f"tensor {self._tname[i]!r} partitions over axis "
+                        f"{a!r} which is not in the batch axes {axes}")
+                expo[i, j] = k
+        return {"numel": np.asarray(self._wnumel, dtype=np.float64),
+                "dbytes": self._db.copy(),
+                "gbytes": np.asarray(self._gb, dtype=np.float64),
+                "expo": expo}
+
+    def batch_bind(self, meshes, axes: Optional[tuple] = None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized :meth:`_local`: local (numel, bytes) arrays of
+        shape ``[len(meshes), nt]`` for a batch of mesh dicts.
+
+        This is the numpy reference semantics for the JAX batched
+        backend (tests pin the two against ``_local`` per row); missing
+        axes default to degree 1, matching ``ParallelCfg.axes`` never
+        holding degenerate axes."""
+        if axes is None:
+            names: set = set()
+            for m in meshes:
+                names.update(m)
+            axes = tuple(sorted(names))
+        t = self.batch_tables(axes)
+        degs = np.asarray([[float(m.get(a, 1)) for a in axes]
+                           for m in meshes], dtype=np.float64)
+        denom = np.prod(degs[:, None, :] ** t["expo"][None, :, :], axis=2)
+        ln = t["numel"][None, :] / denom
+        return ln, ln * t["dbytes"][None, :]
+
     # ---- per-config local sizes -----------------------------------------
     def _local(self, cfg: ParallelCfg) -> tuple[list, list]:
         """(local numel, local bytes) per tensor under cfg's mesh degrees."""

@@ -38,7 +38,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
 
-from .compiled import CompiledBackend
+from .compiled import _PER_RANK_COLLS, _RING_COLLS, CompiledBackend
 from .costmodel import HardwareProfile, TPU_V5E
 from .distribute import ParallelCfg, distribute
 from .graphdist import apply_pipeline
@@ -128,12 +128,29 @@ class SweepResult(list):
 
     ``pruned`` tallies the skipped configs by coarse reason bucket
     (e.g. ``microbatch_indivisible``) so sweep summaries can say *why*
-    the feasible set shrank, not just that it did."""
+    the feasible set shrank, not just that it did.
 
-    def __init__(self, points=(), skipped=(), backend: str = "compiled"):
+    Search/backend accounting (:meth:`summary`): ``engine_stats`` carries
+    :meth:`CompiledBackend.stats` (structure classes, compiles, cache
+    hits), ``batch_stats`` the batched backend's kernel/batch-size
+    record, and for ``search != "full"`` the result holds only the
+    Pareto front — ``evaluated``/``visited``/``total`` say what it cost."""
+
+    def __init__(self, points=(), skipped=(), backend: str = "compiled", *,
+                 search: str = "full", engine_stats: Optional[dict] = None,
+                 batch_stats: Optional[dict] = None,
+                 evaluated: Optional[int] = None,
+                 visited: Optional[int] = None,
+                 total: Optional[int] = None):
         super().__init__(points)
         self.skipped: list[SkippedConfig] = list(skipped)
         self.backend = backend
+        self.search = search
+        self.engine_stats = engine_stats
+        self.batch_stats = batch_stats
+        self.evaluated = evaluated
+        self.visited = visited
+        self.total = total
 
     @property
     def points(self) -> list[DSEPoint]:
@@ -149,10 +166,27 @@ class SweepResult(list):
 
     def summary(self) -> str:
         bits = [f"{len(self)} feasible point(s)"]
+        if self.search == "pareto":
+            bits[0] = (f"{len(self)} Pareto-front point(s) of "
+                       f"{self.evaluated} evaluated")
+        elif self.search == "bnb":
+            pct = (100.0 * self.visited / self.total) if self.total else 0.0
+            bits[0] = (f"{len(self)} Pareto-front point(s); branch-and-"
+                       f"bound visited {self.visited}/{self.total} "
+                       f"configs ({pct:.1f}%)")
         if self.skipped:
             pruned = ", ".join(f"{k}={v}"
                                for k, v in sorted(self.pruned.items()))
             bits.append(f"{len(self.skipped)} skipped ({pruned})")
+        es = self.engine_stats
+        if es:
+            bits.append(f"engine: {es['classes']} structure class(es), "
+                        f"{es['compiles']} compile(s), {es['hits']} hit(s)")
+        bs = self.batch_stats
+        if bs and bs.get("batch_sizes"):
+            sizes = bs["batch_sizes"]
+            bits.append(f"batched: {bs['points']} point(s) in "
+                        f"{len(sizes)} batch(es), max batch {max(sizes)}")
         return "; ".join(bits)
 
 
@@ -224,7 +258,7 @@ def _pow2_divisors(n: int) -> list[int]:
 def enumerate_configs(world: int, *, max_tp: int = 64, max_pp: int = 64,
                       max_cp: int = 64, with_fsdp: bool = True,
                       ep: Optional[int] = None,
-                      microbatches: int = 1,
+                      microbatches=1,
                       schedule="1f1b", vstages: int = 1,
                       placements: Optional[Iterable] = None
                       ) -> Iterable[ParallelCfg]:
@@ -234,7 +268,10 @@ def enumerate_configs(world: int, *, max_tp: int = 64, max_pp: int = 64,
     :data:`repro.core.schedules.SCHEDULES` — the latter makes the
     pipeline schedule one more swept dimension (each factorization is
     enumerated once per schedule).  ``vstages`` applies to interleaved
-    points (other schedules have no chunking).
+    points (other schedules have no chunking).  ``microbatches`` may
+    likewise be a single count or an iterable of counts — the batched
+    backend evaluates the whole mb dimension in one kernel at pp = 1,
+    and branch-and-bound prunes it from closed-form step predictions.
 
     ``placements`` makes the axis *placement* a swept dimension: each
     entry is an axis order (innermost first, e.g. ``("tp", "dp", "pp")``)
@@ -244,6 +281,8 @@ def enumerate_configs(world: int, *, max_tp: int = 64, max_pp: int = 64,
     are deduplicated.  Placement changes collective *time* on a
     topology-aware profile, never bytes."""
     scheds = (schedule,) if isinstance(schedule, str) else tuple(schedule)
+    mbs = ((microbatches,) if isinstance(microbatches, int)
+           else tuple(microbatches))
     place_opts = (None,) if placements is None else tuple(
         tuple(p) for p in placements)
     for tp in _pow2_divisors(world):
@@ -269,30 +308,32 @@ def enumerate_configs(world: int, *, max_tp: int = 64, max_pp: int = 64,
                         pass  # EP reuses the dp axis (tokens<->experts A2A)
                     # schedules only differentiate pipelined points
                     for sched in (scheds if pp > 1 else scheds[:1]):
-                        seen_places = set()
-                        for place in place_opts:
-                            if place is not None:
-                                place = normalize_placement(place, axes)
-                                # degree-1 axes don't stride the grid:
-                                # orders differing only in where "pp"
-                                # sits are physically identical at pp=1
-                                key = tuple(a for a in place
-                                            if a != "pp" or pp > 1)
-                                if key in seen_places:
-                                    continue
-                                seen_places.add(key)
-                            yield ParallelCfg(
-                                axes=axes,
-                                dp_axis="dp" if dp > 1 else None,
-                                tp_axis="tp" if tp > 1 else None,
-                                sp=tp > 1,
-                                cp_axis="cp" if cp > 1 else None,
-                                ep_axis="dp" if (ep and dp > 1) else None,
-                                fsdp=fsdp, pp=pp,
-                                microbatches=microbatches,
-                                schedule=sched,
-                                vstages=vstages if sched == "interleaved" else 1,
-                                placement=place or ())
+                        for mb in mbs:
+                            seen_places = set()
+                            for place in place_opts:
+                                if place is not None:
+                                    place = normalize_placement(place, axes)
+                                    # degree-1 axes don't stride the grid:
+                                    # orders differing only in where "pp"
+                                    # sits are physically identical at pp=1
+                                    key = tuple(a for a in place
+                                                if a != "pp" or pp > 1)
+                                    if key in seen_places:
+                                        continue
+                                    seen_places.add(key)
+                                yield ParallelCfg(
+                                    axes=axes,
+                                    dp_axis="dp" if dp > 1 else None,
+                                    tp_axis="tp" if tp > 1 else None,
+                                    sp=tp > 1,
+                                    cp_axis="cp" if cp > 1 else None,
+                                    ep_axis="dp" if (ep and dp > 1) else None,
+                                    fsdp=fsdp, pp=pp,
+                                    microbatches=mb,
+                                    schedule=sched,
+                                    vstages=(vstages if sched == "interleaved"
+                                             else 1),
+                                    placement=place or ())
 
 
 def evaluate_point(build: Callable[[], tuple], cfg: ParallelCfg, env: Env,
@@ -381,6 +422,256 @@ def evaluate_or_skip(cfg: ParallelCfg, *, env: Env, hw: HardwareProfile,
 
 
 RANK_MODES = ("step_time", "effective_goodput")
+SEARCH_MODES = ("full", "pareto", "bnb")
+
+
+def _objective(p: DSEPoint) -> tuple:
+    """The sweep's multi-objective vector: latency, footprint, and
+    goodput-deflated latency (== step_ms when no resilience spec)."""
+    return (p.step_ms, p.peak_gb, p.effective_step_ms)
+
+
+def _dominates(a: tuple, b: tuple) -> bool:
+    """Strict Pareto domination: <= everywhere, < somewhere."""
+    return a != b and a[0] <= b[0] and a[1] <= b[1] and a[2] <= b[2]
+
+
+def pareto_front(points: list) -> list:
+    """Non-dominated subset over (step_ms, peak_gb, effective_step_ms).
+
+    Exact objective ties are ALL kept (neither dominates), so front
+    membership is deterministic under backend-identical re-evaluation.
+    Candidates are processed in lexicographic objective order — any
+    dominator sorts strictly earlier, so the running front is the exact
+    front of the processed prefix and each candidate only scans the
+    (small) current front.  Input order is preserved in the output."""
+    objs = [_objective(p) for p in points]
+    order = sorted(range(len(points)), key=objs.__getitem__)
+    front: list[int] = []
+    for i in order:
+        if not any(_dominates(objs[j], objs[i]) for j in front):
+            front.append(i)
+    front.sort()
+    return [points[i] for i in front]
+
+
+class _Archive:
+    """Running Pareto archive of evaluated objective vectors (the BnB
+    incumbent set), kept reduced to its own front: if ANY evaluated
+    point strictly dominates a candidate's bound vector, some front
+    member does too (domination is transitive)."""
+
+    def __init__(self):
+        self.front: list[tuple] = []
+
+    def add(self, obj: tuple) -> None:
+        if obj in self.front or any(_dominates(f, obj) for f in self.front):
+            return
+        self.front = [f for f in self.front if not _dominates(obj, f)]
+        self.front.append(obj)
+
+    def prunes(self, lb: tuple) -> bool:
+        return any(_dominates(f, lb) for f in self.front)
+
+
+def _cell_floor(prog, cfg0: ParallelCfg, hw: HardwareProfile,
+                recompute: bool, comm_ok: bool) -> tuple:
+    """Closed-form step lower-bound pieces for one BnB cell:
+    ``(M, path, O)`` seconds, all monotone consequences of the cost
+    program with no scheduling.
+
+    * ``M`` — max over pipeline stages of per-stream microbatch-phase
+      busy time: every schedule runs each stage's ``mb`` slot copies
+      serially per stream, so ``makespan >= mb * M``.
+    * ``path`` — single-microbatch critical path: microbatch 1's fwd
+      chunk slots chain stage-to-stage and its bwd slots chain back, and
+      each slot's span is >= both of its stream busy times, so
+      ``makespan >= sum_c max-stream(fwd_c) + max-stream(bwd_c)``.
+      Sound for the replay schedules (gpipe / 1f1b / interleaved) where
+      a whole chunk slot is a dependency unit; zb-h1 splits weight-grad
+      work off the chain, so callers must not apply it there.
+    * ``O`` — max over stages of per-stream optimizer busy time
+      (``step = makespan + max_s opt_span_s >= makespan + O``).
+
+    The comm stream is only counted (``comm_ok``) on flat profiles
+    without per-collective algorithm overrides, where the default
+    lowering is exact; otherwise comm >= 0 is all the bound uses,
+    keeping it sound for ANY topology, algorithm, or placement."""
+    mesh = cfg0.mesh
+    ln, lb = prog._local(cfg0)
+    lay = prog._layout(max(1, cfg0.pp), getattr(cfg0, "vstages", 1))
+    peak, hbm, eff = hw.peak_flops, hw.hbm_bw, hw.efficiency
+    lat = hw.link_latency
+    comp_s: dict = {}
+    comm_s: dict = {}
+    oc_s: dict = {}
+    om_s: dict = {}
+    fpc: dict = {}
+    fpm: dict = {}
+    bpc: dict = {}
+    bpm: dict = {}
+    bump = lambda d, k, v: d.__setitem__(k, d.get(k, 0.0) + v)  # noqa: E731
+    for e in lay.entries:
+        cm, ph, s, ch = e[11], e[4], e[5], e[6]
+        if cm is not None:
+            if not comm_ok:
+                continue
+            if cm[0] == "SendRecv":
+                bw = hw.link_bw_axis.get("pp", hw.link_bw)
+                d = lb[cm[1]] / bw + lat
+            else:
+                coll, axis, ref, other = cm
+                n = mesh[axis]
+                if n <= 1:
+                    continue
+                full = prog._gb[ref]
+                for a in other:
+                    full /= mesh[a]
+                size = full if coll in _PER_RANK_COLLS else full / n
+                if coll == "AllReduce":
+                    wire, steps = size * 2 * (n - 1) / n, 2 * (n - 1)
+                elif coll in _RING_COLLS or coll == "AllToAll":
+                    wire, steps = size * (n - 1) / n, n - 1
+                else:
+                    wire, steps = size, n - 1
+                bw = hw.link_bw_axis.get(axis, hw.link_bw)
+                d = wire / bw + steps * lat
+            if ph == "opt":
+                bump(om_s, s, d)
+            else:
+                bump(comm_s, s, d)
+                bump(fpm if ph == "fwd" else bpm, ch, d)
+            continue
+        flop = e[8]
+        if flop is None:
+            flops = 0.0
+        elif flop[0] == "scale":
+            flops = flop[1] * ln[flop[2]]
+        else:
+            flops = 2.0
+            for fval, axs in prog._eins_f[flop[1]]:
+                deg = 1
+                for a in axs:
+                    deg *= mesh[a]
+                flops *= fval / deg
+        ba = 0.0
+        for t in e[9]:
+            ba += lb[t]
+        d = max(flops / (peak * eff.get(e[3], 0.9)) if flops else 0.0,
+                ba / hbm)
+        if ph == "opt":
+            bump(oc_s, s, d)
+        elif ph == "fwd":
+            bump(comp_s, s, d)
+            bump(fpc, ch, d)
+            if recompute:                       # extras replay in bwd slots
+                bump(comp_s, s, d)
+                bump(bpc, ch, d)
+        else:
+            bump(comp_s, s, d)
+            bump(bpc, ch, d)
+    stages = set(comp_s) | set(comm_s)
+    M = max((max(comp_s.get(s, 0.0), comm_s.get(s, 0.0)) for s in stages),
+            default=0.0)
+    ostages = set(oc_s) | set(om_s)
+    O = max((max(oc_s.get(s, 0.0), om_s.get(s, 0.0)) for s in ostages),
+            default=0.0)
+    chunks = set(fpc) | set(fpm) | set(bpc) | set(bpm)
+    path = sum(max(fpc.get(c, 0.0), fpm.get(c, 0.0))
+               + max(bpc.get(c, 0.0), bpm.get(c, 0.0)) for c in chunks)
+    return M, path, O
+
+
+def branch_and_bound(engine: CompiledBackend, cfgs: list,
+                     hw: HardwareProfile, *, recompute: bool = False,
+                     name: str = "dse", algorithms: Optional[dict] = None,
+                     verify: bool = False,
+                     mem_limit_gb: Optional[float] = None,
+                     resilience=None) -> tuple[list, list, int]:
+    """Pruned search over the config lattice; returns
+    ``(evaluated points, skipped, visited)`` with the exhaustive Pareto
+    front guaranteed to be a subset of the evaluated points.
+
+    Configs are bucketed into *cells* — one (structure class, mesh
+    degrees, pp, vstages) each — and cells are visited in ascending
+    order of their closed-form step floor so strong incumbents enter the
+    archive early.  A candidate is pruned when an already-evaluated
+    point strictly dominates its bound vector
+    ``(step_floor, peak_gb, step_floor)``:
+
+    * step floor — :func:`_cell_floor` busy/critical-path pieces:
+      ``max(mb * stage-busy-max, single-mb chunk path) + opt-busy-max``;
+      schedule bubbles, exposed comm, and stream serialization only add.
+    * peak_gb — the compiled memory model is closed-form per config (no
+      instantiate/simulate), so the memory coordinate is EXACT.
+    * effective floor — goodput <= 1, so effective step >= step.
+
+    Strict domination of a lower bound implies strict domination of the
+    true vector, so no exhaustive-front point is ever pruned (ties are
+    never pruned); ``visited`` counts full evaluations only (the memory
+    model runs per candidate — that is the closed-form piece the search
+    is allowed to consult for free)."""
+    cells: dict = {}
+    order: list = []
+    skipped: list = []
+    for cfg in cfgs:
+        try:
+            prog = engine.program(cfg)
+        except InfeasibleConfigError as e:
+            skipped.append(_skip(cfg, e, verify=verify))
+            continue
+        key = (id(prog), tuple(sorted(cfg.axes.items())), max(1, cfg.pp),
+               getattr(cfg, "vstages", 1))
+        if key not in cells:
+            cells[key] = (prog, [])
+            order.append(key)
+        cells[key][1].append(cfg)
+
+    comm_ok = (algorithms is None
+               and getattr(hw, "topology", None) is None)
+    plan = []
+    for key in order:
+        prog, cell = cells[key]
+        floor = _cell_floor(prog, cell[0], hw, recompute, comm_ok)
+        slb_min = min(c.microbatches for c in cell) * floor[0] + floor[2]
+        plan.append((slb_min, key, floor))
+    plan.sort(key=lambda x: x[0])
+
+    def _step_lb(cfg, floor):
+        m, path, o = floor
+        lb = cfg.microbatches * m
+        # the chunk-chain path bound only holds where a whole chunk slot
+        # is the dependency unit (zb-h1 splits weight-grads off-chain)
+        if cfg.schedule != "zb-h1" or max(1, cfg.pp) <= 1:
+            lb = max(lb, path)
+        return lb + o
+
+    archive = _Archive()
+    points: list[DSEPoint] = []
+    visited = 0
+    for _slb, key, floor in plan:
+        prog, cell = cells[key]
+        for cfg in sorted(cell, key=lambda c: c.microbatches):
+            slb_ms = _step_lb(cfg, floor) * 1e3
+            mem_gb = prog.peak_memory(cfg, recompute=recompute).peak_gb
+            if archive.prunes((slb_ms, mem_gb, slb_ms)):
+                continue
+            visited += 1
+            try:
+                pt = evaluate_point_compiled(engine, cfg, hw,
+                                             recompute=recompute,
+                                             name=name, reuse=True,
+                                             algorithms=algorithms)
+            except InfeasibleConfigError as e:
+                skipped.append(_skip(cfg, e, verify=verify))
+                continue
+            if resilience is not None:
+                score_resilience([pt], resilience, hw)
+            if mem_limit_gb is not None and pt.peak_gb > mem_limit_gb:
+                pt.label += " (OOM)"
+            points.append(pt)
+            archive.add(_objective(pt))
+    return points, skipped, visited
 
 
 def score_resilience(points: list[DSEPoint], resilience, hw) -> None:
@@ -421,6 +712,7 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
           verify: bool = False,
           rank_by: str = "step_time",
           resilience=None,
+          search: str = "full",
           **enum_kw) -> SweepResult:
     """Evaluate every enumerated strategy; see module docstring.
 
@@ -428,6 +720,21 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
     are identical and identically ordered to the serial run); ``engine``
     lets callers share a pre-warmed :class:`CompiledBackend` across
     sweeps (what :meth:`repro.api.Scenario.sweep` does).
+
+    ``backend="batched"`` evaluates whole structure classes at once on
+    the JAX array backend (:mod:`repro.core.batched`); configs the
+    batched kernels cannot replay (zb-h1, topology profiles, explicit
+    collective-algorithm overrides) transparently fall back to the
+    per-config compiled path, so results match ``backend="compiled"``
+    to float64 accuracy with identical ordering.
+
+    ``search`` selects what the sweep returns: ``"full"`` (default) all
+    feasible points ranked; ``"pareto"`` only the Pareto front over
+    (step_ms, peak_gb, effective_step_ms) after evaluating everything;
+    ``"bnb"`` the same exact front found by branch-and-bound over the
+    config lattice, pruning subtrees whose closed-form lower bounds are
+    already strictly dominated — typically evaluating a small fraction
+    of the space (``SweepResult.visited`` / ``.total``).
 
     Configs that fail the cheap workload-shape feasibility check are
     pruned *before* dispatch (never hitting the executor) and recorded
@@ -444,15 +751,30 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
     disagree.  With the default ``rank_by="step_time"`` and no spec the
     sweep is bit-identical to before.
     """
-    if backend not in ("compiled", "sympy"):
-        raise ValueError(f"backend {backend!r} not in compiled|sympy")
+    if backend not in ("compiled", "sympy", "batched"):
+        raise ValueError(
+            f"backend {backend!r} not in compiled|sympy|batched")
+    if search not in SEARCH_MODES:
+        raise ValueError(f"search {search!r} not in {SEARCH_MODES}")
+    if search == "bnb" and backend == "sympy":
+        raise ValueError("search='bnb' needs the compiled cost model "
+                         "(backend='compiled' or 'batched')")
     if rank_by not in RANK_MODES:
         raise ValueError(f"rank_by {rank_by!r} not in {RANK_MODES}")
     if rank_by == "effective_goodput" and resilience is None:
         raise ValueError(
             "rank_by='effective_goodput' requires resilience=ResilienceSpec")
     cfgs = list(enumerate_configs(world, **enum_kw))
-    if backend == "compiled" and engine is None:
+    bengine = None
+    if backend == "batched":
+        from .batched import BatchedBackend
+        if isinstance(engine, BatchedBackend):
+            bengine, engine = engine, engine.engine
+        else:
+            if engine is None:
+                engine = CompiledBackend(build, env, n_layers=n_layers)
+            bengine = BatchedBackend(engine)
+    elif backend == "compiled" and engine is None:
         engine = CompiledBackend(build, env, n_layers=n_layers)
 
     # cheap pre-dispatch feasibility pass: infeasible factorizations are
@@ -469,16 +791,52 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
             feasible.append(cfg)
     cfgs = feasible
 
-    serial = not (workers and workers > 1)
+    serial = not (workers and workers > 1) or backend == "batched"
 
     def eval_one(cfg: ParallelCfg):
         return evaluate_or_skip(
             cfg, env=env, hw=hw, n_layers=n_layers, name=name,
-            engine=engine, build=None if backend == "compiled" else build,
+            engine=engine, build=build if backend == "sympy" else None,
             recompute=recompute, mem_limit_gb=mem_limit_gb, reuse=serial,
             algorithms=algorithms, verify=verify)
 
-    if workers and workers > 1 and len(cfgs) > 1:
+    def _stats():
+        return {"engine_stats": engine.stats() if engine is not None
+                else None,
+                "batch_stats": bengine.stats() if bengine is not None
+                else None}
+
+    if search == "bnb":
+        points, bnb_skips, visited = branch_and_bound(
+            engine, cfgs, hw, recompute=recompute, name=name,
+            algorithms=algorithms, verify=verify,
+            mem_limit_gb=mem_limit_gb, resilience=resilience)
+        front = pareto_front(points)
+        rank_points(front, rank_by)
+        return SweepResult(front, prefiltered + bnb_skips, backend=backend,
+                           search="bnb", evaluated=len(points),
+                           visited=visited, total=len(cfgs), **_stats())
+
+    if backend == "batched":
+        # Native batched evaluation; configs it cannot replay come back
+        # as None and fall through to the per-config compiled path, so
+        # result order always matches the serial compiled sweep.
+        if algorithms or getattr(hw, "topology", None) is not None:
+            native = [None] * len(cfgs)
+        else:
+            native = bengine.evaluate_many(cfgs, hw, recompute=recompute)
+        results = []
+        for cfg, r in zip(cfgs, native):
+            if r is None:
+                results.append(eval_one(cfg))
+            else:
+                sim, mem = r
+                pt = DSEPoint(cfg=cfg, sim=sim, mem=mem,
+                              label=cfg.describe())
+                if mem_limit_gb is not None and pt.peak_gb > mem_limit_gb:
+                    pt.label += " (OOM)"
+                results.append(pt)
+    elif workers and workers > 1 and len(cfgs) > 1:
         chunks = [cfgs[i:i + chunk_size]
                   for i in range(0, len(cfgs), chunk_size)]
         with ThreadPoolExecutor(max_workers=workers) as pool:
@@ -494,5 +852,12 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
                              if isinstance(r, SkippedConfig)]
     if resilience is not None:
         score_resilience(points, resilience, hw)
+    if search == "pareto":
+        evaluated = len(points)
+        points = pareto_front(points)
+        rank_points(points, rank_by)
+        return SweepResult(points, skipped, backend=backend,
+                           search="pareto", evaluated=evaluated,
+                           total=len(cfgs), **_stats())
     rank_points(points, rank_by)
-    return SweepResult(points, skipped, backend=backend)
+    return SweepResult(points, skipped, backend=backend, **_stats())

@@ -12,12 +12,33 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .cost_reduce import cost_reduce_bet
 from .flash_attention import flash_attention_bhsd
 from .rwkv6_scan import wkv6_bhsd
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cost_reduce(x, w, *, interpret: Optional[bool] = None) -> jax.Array:
+    """Batched cost reduction ``out[b, e] = sum_t x[b, t] * w[e, t]``.
+
+    The dense contraction of the batched DSE backend: x [B, K] per-slot
+    durations, w [G, K] static busy-group membership rows (the sparse
+    byte-access / memory-event selections go through ``segment_sum``
+    COO reductions instead).  On TPU the Pallas MXU kernel runs compiled
+    (float32 accumulation); elsewhere the jnp reference contraction runs
+    in the input dtype — float64 under x64, which is what the batched
+    backend's 1e-6 CPU parity budget relies on.  ``interpret=True``
+    forces the Pallas kernel through the interpreter (CI correctness
+    tests for the kernel itself)."""
+    if interpret is None:
+        if not _on_tpu():
+            return x @ w.T.astype(x.dtype)
+        return cost_reduce_bet(x, w).astype(x.dtype)
+    return cost_reduce_bet(x, w, interpret=interpret).astype(x.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",

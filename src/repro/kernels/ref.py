@@ -61,5 +61,5 @@ def ref_ssm(dA, dBx, h0):
         h = a * h + x
         return h, h
     xs = (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3))
-    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    h_last, hs = jax.lax.scan(step, h0.astype(dA.dtype), xs)
     return hs.transpose(1, 0, 2, 3), h_last

@@ -191,3 +191,56 @@ def test_einsum_out_shape_hint_threaded():
     out = b.einsum("proj", "bh,h->bk", [x, w],
                    out_shape_hint={"b": sym("B"), "k": sym("K")})
     assert out.shape == (sym("B"), sym("K"))
+
+
+# ---- engine cache LRU bounds and batched staleness guard -----------------
+
+def _env_for(batch):
+    return Scenario(GPT).train(batch=batch, seq=64).env()
+
+
+def test_engine_cache_lru_eviction():
+    """The compiled-engine cache is LRU-bounded at maxsize: the oldest
+    binding falls out and is rebuilt on re-request; a recent one is
+    returned identically."""
+    api.clear_graph_cache()
+    n = api._engines.maxsize
+    engines = {b: api._engines.engine(GPT, "train", _env_for(b))
+               for b in range(1, n + 3)}       # n+2 distinct env keys
+    assert len(api._engines._store) == n
+    # most recent still cached (same object) ...
+    assert api._engines.engine(GPT, "train", _env_for(n + 2)) \
+        is engines[n + 2]
+    # ... but the two oldest were evicted and come back as new objects
+    assert api._engines.engine(GPT, "train", _env_for(1)) is not engines[1]
+    api.clear_graph_cache()
+
+
+def test_batched_engine_cache_eviction_and_staleness():
+    """The batched cache is LRU-bounded too, and a hit is honoured only
+    while it still wraps the live compiled engine for the same key — if
+    the base was evicted and rebuilt, the stale wrapper is replaced
+    (its jitted kernels would otherwise pin dead structure classes)."""
+    api.clear_graph_cache()
+    n = api._batched_engines.maxsize
+    first = api._batched_engines.engine(GPT, "train", _env_for(1))
+    assert first.engine is api._engines.engine(GPT, "train", _env_for(1))
+    # same key -> same wrapper while the base engine is alive
+    assert api._batched_engines.engine(GPT, "train", _env_for(1)) is first
+    # push the base (and wrapper) out of both LRUs
+    for b in range(2, api._engines.maxsize + 3):
+        api._batched_engines.engine(GPT, "train", _env_for(b))
+    assert len(api._batched_engines._store) == n
+    rebuilt = api._batched_engines.engine(GPT, "train", _env_for(1))
+    assert rebuilt is not first
+    assert rebuilt.engine is api._engines.engine(GPT, "train", _env_for(1))
+    assert rebuilt.engine is not first.engine
+    api.clear_graph_cache()
+
+
+def test_clear_graph_cache_clears_batched():
+    api._batched_engines.engine(GPT, "train", _env_for(4))
+    assert api.compiled_cache_stats()["batched_engines"] >= 1
+    api.clear_graph_cache()
+    stats = api.compiled_cache_stats()
+    assert stats["engines"] == 0 and stats["batched_engines"] == 0

@@ -1,0 +1,210 @@
+"""DSE search machinery: enumerate_configs edges, Pareto-front
+extraction, and branch-and-bound exactness.
+
+The headline guarantee under test: ``search="bnb"`` returns EXACTLY the
+front that exhaustive enumeration + ``pareto_front`` would, while fully
+evaluating well under 25% of the (pinned) config space — the pruning
+rule only discards configs whose closed-form lower-bound vector is
+already strictly dominated by an evaluated point, so no front member
+can ever be pruned.
+"""
+import pytest
+
+from repro import Scenario
+from repro.configs import get
+from repro.core.dse import (DSEPoint, _pow2_divisors, enumerate_configs,
+                            pareto_front)
+
+# ---- enumerate_configs edges ------------------------------------------------
+
+
+def test_pow2_divisors():
+    assert _pow2_divisors(1) == [1]
+    assert _pow2_divisors(16) == [1, 2, 4, 8, 16]
+    assert _pow2_divisors(12) == [1, 2, 4]
+    assert _pow2_divisors(24) == [1, 2, 4, 8]
+    assert _pow2_divisors(6) == [1, 2]
+    assert _pow2_divisors(7) == [1]
+
+
+def test_enumerate_world_one():
+    cfgs = list(enumerate_configs(1))
+    assert len(cfgs) == 1
+    c = cfgs[0]
+    assert c.axes == {} and c.pp == 1 and not c.fsdp
+
+
+def test_enumerate_non_pow2_world():
+    """Non-power-of-two worlds factorize over pow2 divisors; the
+    residual factor lands in dp (dp = world / (tp*cp*pp))."""
+    cfgs = list(enumerate_configs(12, with_fsdp=False))
+    assert cfgs
+    for c in cfgs:
+        tp = c.axes.get("tp", 1)
+        cp = c.axes.get("cp", 1)
+        dp = c.axes.get("dp", 1)
+        assert dp * tp * cp * c.pp == 12
+        assert tp in (1, 2, 4) and c.pp in (1, 2, 4)
+    # dp always absorbs the odd factor 3, so dp is a multiple of 3
+    assert all(c.axes.get("dp", 1) % 3 == 0 for c in cfgs)
+
+
+def test_enumerate_caps_bind():
+    base = list(enumerate_configs(16, with_fsdp=False))
+    assert any(c.axes.get("tp", 1) > 2 for c in base)
+    assert any(c.pp > 2 for c in base)
+    capped = list(enumerate_configs(16, with_fsdp=False, max_tp=2, max_pp=2))
+    assert capped
+    assert all(c.axes.get("tp", 1) <= 2 for c in capped)
+    assert all(c.pp <= 2 for c in capped)
+    assert all(c.axes.get("cp", 1) <= 4
+               for c in enumerate_configs(16, max_cp=4))
+
+
+def test_enumerate_microbatch_iterable():
+    """An iterable microbatches makes mb a swept dimension; pp=1 points
+    sweep it too (the batched backend evaluates that axis in-batch)."""
+    cfgs = list(enumerate_configs(4, with_fsdp=False,
+                                  microbatches=(1, 2, 4)))
+    flat = [c for c in cfgs if c.pp == 1]
+    piped = [c for c in cfgs if c.pp > 1]
+    assert sorted({c.microbatches for c in flat}) == [1, 2, 4]
+    assert sorted({c.microbatches for c in piped}) == [1, 2, 4]
+    # scalar form unchanged
+    assert all(c.microbatches == 2
+               for c in enumerate_configs(4, microbatches=2))
+
+
+def test_enumerate_schedule_iterable_only_differentiates_pipelined():
+    cfgs = list(enumerate_configs(8, with_fsdp=False,
+                                  schedule=("1f1b", "gpipe")))
+    flat = [c for c in cfgs if c.pp == 1]
+    assert len({c.schedule for c in flat}) == 1
+    piped = [c for c in cfgs if c.pp > 1]
+    assert {c.schedule for c in piped} == {"1f1b", "gpipe"}
+
+
+# ---- pareto_front -----------------------------------------------------------
+
+
+class _P:
+    """Bare objective carrier quacking like a DSEPoint."""
+
+    def __init__(self, step, peak, eff=None):
+        self.step_ms = step
+        self.peak_gb = peak
+        self.effective_step_ms = eff if eff is not None else step
+
+
+def _brute_front(pts):
+    objs = [(p.step_ms, p.peak_gb, p.effective_step_ms) for p in pts]
+
+    def dominated(i):
+        return any(o != objs[i] and all(a <= b for a, b in zip(o, objs[i]))
+                   for o in objs)
+    return [p for i, p in enumerate(pts) if not dominated(i)]
+
+
+def test_pareto_front_brute_force():
+    import random
+    rng = random.Random(7)
+    pts = [_P(rng.randint(1, 20), rng.randint(1, 20), rng.randint(1, 20))
+           for _ in range(200)]
+    got = pareto_front(pts)
+    want = _brute_front(pts)
+    assert [id(p) for p in got] == [id(p) for p in want]
+
+
+def test_pareto_front_keeps_ties_and_order():
+    a, b = _P(1.0, 5.0), _P(1.0, 5.0)        # exact tie: both kept
+    c = _P(2.0, 4.0)                          # tradeoff: kept
+    d = _P(2.0, 5.0)                          # dominated by a/b
+    got = pareto_front([d, c, b, a])
+    assert got == [c, b, a]                   # input order preserved
+
+
+def test_pareto_front_trivial():
+    assert pareto_front([]) == []
+    p = _P(1.0, 1.0)
+    assert pareto_front([p]) == [p]
+
+
+# ---- branch-and-bound -------------------------------------------------------
+
+SPACE = dict(microbatches=(1, 2, 4, 8), schedule=("1f1b", "gpipe"))
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    return Scenario(get("qwen3-14b").smoke).train(batch=32, seq=64)
+
+
+def test_bnb_exact_front_with_pruning(scenario):
+    """Pinned <= 2000-config space: bnb returns the exhaustive front
+    exactly while fully evaluating < 25% of the feasible configs."""
+    full = scenario.sweep(16, search="pareto", **SPACE)
+    bnb = scenario.sweep(16, search="bnb", **SPACE)
+    assert len(full) > 0
+    assert sorted(p.cfg.describe() for p in full) == \
+        sorted(p.cfg.describe() for p in bnb)
+    for a, b in zip(sorted(full, key=lambda p: p.label),
+                    sorted(bnb, key=lambda p: p.label)):
+        assert a.sim.step_time == b.sim.step_time
+        assert a.mem.peak_bytes == b.mem.peak_bytes
+    assert bnb.total <= 2000
+    assert bnb.visited < 0.25 * bnb.total, (bnb.visited, bnb.total)
+    assert bnb.search == "bnb" and full.search == "pareto"
+    assert "branch-and-bound" in bnb.summary()
+
+
+def test_bnb_exact_front_all_schedules(scenario):
+    """zb-h1 (no critical-path bound) and interleaved stay exact."""
+    space = dict(microbatches=(2, 4, 8),
+                 schedule=("1f1b", "gpipe", "interleaved", "zb-h1"))
+    full = scenario.sweep(8, search="pareto", **space)
+    bnb = scenario.sweep(8, search="bnb", **space)
+    assert sorted(p.cfg.describe() for p in full) == \
+        sorted(p.cfg.describe() for p in bnb)
+    assert bnb.visited < bnb.total
+
+
+def test_pareto_search_via_api(scenario):
+    """search="pareto" returns the front of the full evaluation with
+    accounting fields populated."""
+    full = scenario.sweep(8, **SPACE)
+    front = scenario.sweep(8, search="pareto", **SPACE)
+    assert front.evaluated == len(full)
+    labels = {p.label for p in full}
+    assert all(p.label in labels for p in front)
+    assert 0 < len(front) <= len(full)
+    assert "Pareto-front" in front.summary()
+
+
+def test_bnb_rejects_sympy(scenario):
+    with pytest.raises(ValueError, match="bnb"):
+        scenario.with_backend("sympy").sweep(8, search="bnb", **SPACE)
+
+
+def test_unknown_search_rejected(scenario):
+    with pytest.raises(ValueError, match="search"):
+        scenario.sweep(8, search="hillclimb", **SPACE)
+
+
+def test_bnb_respects_mem_limit_and_resilience(scenario):
+    """OOM labelling and resilience scoring survive the bnb path."""
+    from repro.ft import ResilienceSpec
+    res = scenario.sweep(16, search="bnb", mem_limit_gb=16.0,
+                         resilience=ResilienceSpec(mtbf=30e3), **SPACE)
+    assert all(p.resilience is not None for p in res)
+    for p in res:
+        assert ("(OOM)" in p.label) == (p.peak_gb > 16.0)
+
+
+def test_full_sweep_unchanged_shape(scenario):
+    """Default search="full" still returns every feasible point ranked
+    by step time (SweepResult list semantics untouched)."""
+    res = scenario.sweep(8, **SPACE)
+    assert isinstance(res[0], DSEPoint)
+    steps = [p.sim.step_time for p in res]
+    assert steps == sorted(steps)
+    assert res.search == "full"

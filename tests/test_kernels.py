@@ -147,3 +147,48 @@ def test_ssm_chunked_vs_ref():
     want_hs, want_hl = ref.ref_ssm(dA, dBx, h0)
     np.testing.assert_allclose(hs, want_hs, atol=1e-5, rtol=1e-4)
     np.testing.assert_allclose(hl, want_hl, atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,e,t", [
+    (1, 1, 1),
+    (4, 7, 33),             # all dims below one tile (padding path)
+    (128, 128, 128),        # exactly one tile
+    (130, 257, 140),        # multi-tile with ragged remainders
+])
+def test_cost_reduce_vs_ref(b, e, t):
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    x = jax.random.normal(ks[0], (b, t), jnp.float32)
+    w = jax.random.normal(ks[1], (e, t), jnp.float32)
+    out = ops.cost_reduce(x, w, interpret=True)
+    want = x @ w.T
+    assert out.shape == (b, e)
+    np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-4)
+
+
+def test_cost_reduce_auto_path_f64():
+    """Off-TPU the auto path is the jnp contraction in the input dtype —
+    float64 under x64, double-precision-close to the numpy product
+    (1e-14 would fail by ~7 digits if the reduction ran in float32)."""
+    from repro.core.batched import _ensure_x64
+    _ensure_x64()
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((5, 37)))
+    w = jnp.asarray(rng.standard_normal((9, 37)))
+    assert x.dtype == jnp.float64
+    out = ops.cost_reduce(x, w)
+    assert out.dtype == jnp.float64
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(x) @ np.asarray(w).T,
+                               rtol=1e-14, atol=1e-14)
+
+
+def test_cost_reduce_counts_semantics():
+    """Integer selection rows act as exact gather-sums (the batched
+    backend's byte-access reductions): 0/1/k weights stay exact."""
+    x = jnp.arange(1, 13, dtype=jnp.float32).reshape(2, 6)
+    w = jnp.asarray([[1, 0, 1, 0, 0, 0],
+                     [0, 2, 0, 0, 0, 3]], jnp.float32)
+    out = ops.cost_reduce(x, w, interpret=True)
+    want = np.asarray([[1 + 3, 2 * 2 + 3 * 6],
+                       [7 + 9, 2 * 8 + 3 * 12]], np.float32)
+    np.testing.assert_array_equal(np.asarray(out), want)
