@@ -31,6 +31,11 @@ runner of any speed catches >2x regressions in either fast path:
   wall-time: a cold 32-rank export (materialization + stamping) then
   ``check_trace_dir`` over the directory; the verifier must stay a
   cheap add-on (< ``MAX_VERIFY_RATIO`` of the export it audits).
+* **obs overhead** — the observability instrumentation (spans +
+  metrics) added to the batched hot path must be free when tracing is
+  disabled (the default): the same warm batched sweep with the
+  instrumentation live-but-disabled vs stubbed out entirely stays
+  within ``MAX_OBS_OVERHEAD``.
 * **generation** — the phase-program path: a 512-token batched
   generation evaluated in closed form (one decode lowering + O(1)
   samples) vs naive per-step evaluation (one full engine evaluation per
@@ -76,6 +81,10 @@ MAX_VERIFY_RATIO = 0.25      # ISSUE 6 acceptance: verification of a
                              # of the ratio swing ~2x run-to-run on a
                              # 1-cpu runner, so the ceiling carries the
                              # same >2x margin as the other thresholds)
+MAX_OBS_OVERHEAD = 1.02      # ISSUE 9 acceptance: disabled tracing
+                             # costs <= 2% on the batched sweep (span()
+                             # is one global check returning a shared
+                             # no-op; counters are one dict hit + add)
 MIN_GEN_RATIO = 10.0         # ISSUE 5 acceptance: closed-form decode
 OUT_TOKENS = 512             # >= 10x naive per-step at 512 output tokens
 NAIVE_STEPS = 12             # naive subset actually timed (then scaled)
@@ -325,6 +334,49 @@ def run(report):
         f"batched sweep only {bat_ratio:.1f}x vs per-config compiled " \
         f"(floor {MIN_BATCHED_RATIO}x) — batch-kernel regression"
 
+    # ---- observability overhead: disabled tracing on the batched sweep ----
+    from repro.core import batched as _batched_mod
+    from repro.obs import spans as _obs_spans
+
+    class _NullInstrument:
+        def inc(self, n=1):
+            pass
+
+        def observe(self, v):
+            pass
+
+    class _NullMetrics:
+        _null = _NullInstrument()
+
+        def counter(self, name):
+            return self._null
+
+        def histogram(self, name, bounds=None):
+            return self._null
+
+    assert not _obs_spans.enabled(), "tracing must be off for this guard"
+    # both paths warm from the batched section above; min-of-5 each
+    t_obs = min(_timed(bbackend.evaluate_many, bcfgs, TPU_V5E)
+                for _ in range(5))
+    real_span, real_metrics = _batched_mod._span, _batched_mod._metrics
+    _batched_mod._span = lambda name, **kw: _obs_spans._NOOP
+    _batched_mod._metrics = _NullMetrics()
+    try:
+        t_bare = min(_timed(bbackend.evaluate_many, bcfgs, TPU_V5E)
+                     for _ in range(5))
+    finally:
+        _batched_mod._span = real_span
+        _batched_mod._metrics = real_metrics
+    obs_ratio = t_obs / t_bare
+    report("perf_smoke/obs_overhead", t_obs * 1e6,
+           f"instrumented {t_obs * 1e3:.1f}ms vs stubbed "
+           f"{t_bare * 1e3:.1f}ms = {obs_ratio:.3f}x")
+    # 1ms absolute slack absorbs timer jitter when the sweep is fast
+    assert t_obs <= t_bare * MAX_OBS_OVERHEAD + 1e-3, \
+        f"disabled tracing costs {obs_ratio:.3f}x the stubbed batched " \
+        f"sweep (ceiling {MAX_OBS_OVERHEAD}x) — the disabled span()/" \
+        f"counter path must stay one global check"
+
     return {
         "sweep": {"points": n_cmp,
                   "compiled_s": round(t_cmp, 3), "sympy_s": round(t_sym, 3),
@@ -364,6 +416,10 @@ def run(report):
                    "verify_s": round(t_ver, 4),
                    "export_s": round(t_vexp, 4),
                    "ratio_of_export": round(verify_ratio, 3)},
+        "obs_overhead": {"points": len(bcfgs),
+                         "instrumented_s": round(t_obs, 4),
+                         "stubbed_s": round(t_bare, 4),
+                         "overhead": round(obs_ratio, 3)},
         "generation": {"out_tokens": OUT_TOKENS,
                        "closed_s": round(t_gen_closed, 3),
                        "naive_s": round(t_gen_naive, 3),

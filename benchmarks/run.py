@@ -43,6 +43,8 @@ def _perf_record(results: dict) -> dict:
             rec["generation_closed_form"] = smoke["generation"]
         if "resilience_sweep" in smoke:
             rec["resilience_sweep_overhead"] = smoke["resilience_sweep"]
+        if "obs_overhead" in smoke:
+            rec["obs_disabled_overhead"] = smoke["obs_overhead"]
     fig8 = results.get("fig8_dse")
     if isinstance(fig8, dict) and "sweep_throughput" in fig8:
         rec["fig8_sweep_throughput"] = fig8["sweep_throughput"]

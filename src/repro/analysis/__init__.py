@@ -21,9 +21,14 @@ simulation), reported through one diagnostics framework:
   run as part of the trace passes: failure/restore epoch alternation
   and monotonicity, pair completeness, manifest agreement, checkpoint-
   step regression.
+* :func:`check_timeline` / :func:`check_timeline_file` — observability
+  timeline audit (``STG5xx``): Chrome-trace schema, scheduling-stream
+  tiling against the recorded step time, comm-span annotations,
+  resilience-track epoch order.
 
 High-level entry points: :meth:`repro.api.Trace.verify`,
-:meth:`repro.api.Job.verify`, ``python -m repro.analysis <trace_dir>``.
+:meth:`repro.api.Job.verify`, ``python -m repro.analysis <trace_dir>``,
+``python -m repro.analysis --timeline <file.json>``.
 """
 from .comm_checks import check_comm
 from .diagnostics import (Diagnostic, RULES, Report, SEVERITIES, rule)
@@ -31,6 +36,7 @@ from .graph_lint import check_guards, lint_graph
 from .resilience_checks import (check_resilience_manifest,
                                 check_resilience_nodes, resilience_markers)
 from .schedule_checks import check_schedule, check_workload_schedule
+from .timeline_checks import check_timeline, check_timeline_file
 from .trace_checks import check_trace, check_trace_dir
 
 __all__ = [
@@ -40,6 +46,7 @@ __all__ = [
     "check_trace", "check_trace_dir",
     "check_resilience_nodes", "check_resilience_manifest",
     "resilience_markers",
+    "check_timeline", "check_timeline_file",
     "verify_workload", "verify_graph",
 ]
 

@@ -1,7 +1,9 @@
-"""CLI: verify offline Chakra trace dirs or the bundled arch configs.
+"""CLI: verify offline Chakra trace dirs, timeline exports, or the
+bundled arch configs.
 
     python -m repro.analysis <trace_dir> [...]    # exported trace dirs
     python -m repro.analysis --configs            # lint every bundled arch
+    python -m repro.analysis --timeline tl.json   # audit timeline JSON
 
 Exit status 1 when any error-severity diagnostic is found (warnings do
 not fail the run; add ``--strict`` to make them fatal).
@@ -11,13 +13,25 @@ from __future__ import annotations
 import argparse
 import sys
 
-from . import check_trace_dir
+from . import check_timeline_file, check_trace_dir
 
 
 def _verify_dirs(dirs: list[str], strict: bool) -> int:
     bad = 0
     for d in dirs:
         rep = check_trace_dir(d)
+        print(rep.render())
+        if not rep.ok or (strict and rep.warnings):
+            bad += 1
+    return 1 if bad else 0
+
+
+def _verify_timelines(paths: list[str], strict: bool) -> int:
+    """Audit saved Perfetto/Chrome-trace exports (``Trace.timeline`` /
+    ``Job.timeline`` / ``repro.obs`` profiles) — the ``STG5xx`` pass."""
+    bad = 0
+    for p in paths:
+        rep = check_timeline_file(p)
         print(rep.render())
         if not rep.ok or (strict and rep.warnings):
             bad += 1
@@ -55,11 +69,19 @@ def main(argv=None) -> int:
     ap.add_argument("--configs", action="store_true",
                     help="verify every bundled arch config instead of "
                          "trace dirs")
+    ap.add_argument("--timeline", action="store_true",
+                    help="treat the positional paths as saved timeline "
+                         "JSON files (Trace.timeline / Job.timeline "
+                         "exports) and run the STG5xx audit")
     ap.add_argument("--strict", action="store_true",
                     help="treat warnings as fatal")
     args = ap.parse_args(argv)
     if args.configs:
         return _verify_configs(args.strict)
+    if args.timeline:
+        if not args.trace_dirs:
+            ap.error("--timeline needs at least one timeline JSON path")
+        return _verify_timelines(args.trace_dirs, args.strict)
     if not args.trace_dirs:
         ap.error("give at least one trace dir (or --configs)")
     return _verify_dirs(args.trace_dirs, args.strict)

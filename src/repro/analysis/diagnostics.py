@@ -2,7 +2,8 @@
 
 Every check emits structured :class:`Diagnostic` records — a stable
 rule code (``STG0xx`` graph lint, ``STG1xx`` distributed comm,
-``STG2xx`` schedule, ``STG3xx`` Chakra trace), a severity, a locus
+``STG2xx`` schedule, ``STG3xx`` Chakra trace, ``STG4xx`` resilience
+annotations, ``STG5xx`` observability timelines), a severity, a locus
 (node / rank / stage / phase), a human message, and an optional fixit
 hint — collected into a :class:`Report`.  The registry below is the
 single source of truth for code -> (severity, title); passes emit via
@@ -102,6 +103,18 @@ RESILIENCE_MANIFEST = rule("STG403", ERROR, "manifest resilience metadata "
 RESILIENCE_CKPT_REGRESSION = rule("STG404", ERROR, "restore rewinds to an "
                                                    "earlier checkpoint than a "
                                                    "prior epoch")
+
+# ---- observability timelines (STG5xx) --------------------------------------
+TIMELINE_SCHEMA = rule("STG501", ERROR, "timeline violates the Chrome-trace "
+                                        "event schema")
+TIMELINE_TILE = rule("STG502", ERROR, "stage scheduling stream has a gap or "
+                                      "overlap between spans")
+TIMELINE_STEP_MISMATCH = rule("STG503", ERROR, "stage track end disagrees "
+                                               "with the recorded step time")
+TIMELINE_COMM_ATTRS = rule("STG504", ERROR, "comm span missing its "
+                                            "collective annotation")
+TIMELINE_RESILIENCE_TRACK = rule("STG505", ERROR, "resilience track epochs "
+                                                  "out of order or malformed")
 
 
 @dataclass(frozen=True)

@@ -62,6 +62,7 @@ from .core.stg import Graph, GraphBuilder
 from .core.symbolic import Env
 from .core.topology import ClusterTopology, normalize_placement
 from .ft.goodput import ResilienceSpec
+from .obs.spans import span as _span
 
 __all__ = ["Scenario", "Trace", "Phase", "Job", "graph_cache_stats",
            "clear_graph_cache", "compiled_cache_stats"]
@@ -83,6 +84,7 @@ class _GraphCache:
         self._lock = threading.Lock()
         self.builds = 0          # cold assemblies (the Scenario.sweep spy)
         self.hits = 0
+        self.evictions = 0
 
     def builder(self, spec: ModelSpec, mode: str) -> GraphBuilder:
         key = (spec, mode)
@@ -98,6 +100,7 @@ class _GraphCache:
             self._store[key] = built
             while len(self._store) > self.maxsize:
                 self._store.popitem(last=False)
+                self.evictions += 1
         return built
 
     def clear(self) -> None:
@@ -105,6 +108,7 @@ class _GraphCache:
             self._store.clear()
             self.builds = 0
             self.hits = 0
+            self.evictions = 0
 
 
 _cache = _GraphCache()
@@ -121,6 +125,9 @@ class _EngineCache:
         self.maxsize = maxsize
         self._store: OrderedDict = OrderedDict()
         self._lock = threading.Lock()
+        self.builds = 0
+        self.cache_hits = 0
+        self.evictions = 0
 
     def engine(self, spec: ModelSpec, mode: str, env: Env) -> CompiledBackend:
         key = (spec, mode, env.signature())
@@ -128,18 +135,24 @@ class _EngineCache:
             hit = self._store.get(key)
             if hit is not None:
                 self._store.move_to_end(key)
+                self.cache_hits += 1
                 return hit
             src = _cache.builder(spec, mode)
             eng = CompiledBackend(lambda: src.clone().graph, env,
                                   n_layers=total_layers(spec))
+            self.builds += 1
             self._store[key] = eng
             while len(self._store) > self.maxsize:
                 self._store.popitem(last=False)
+                self.evictions += 1
             return eng
 
     def clear(self) -> None:
         with self._lock:
             self._store.clear()
+            self.builds = 0
+            self.cache_hits = 0
+            self.evictions = 0
 
 
 _engines = _EngineCache()
@@ -159,6 +172,13 @@ class _BatchedEngineCache:
         self.maxsize = maxsize
         self._store: OrderedDict = OrderedDict()
         self._lock = threading.Lock()
+        self.builds = 0
+        self.cache_hits = 0
+        self.evictions = 0        # LRU pressure: a DIFFERENT key pushed out
+        self.stale_rewraps = 0    # same key, underlying compiled engine
+        #                           changed (e.g. clear_graph_cache or LRU
+        #                           churn in _EngineCache re-built the base):
+        #                           the wrapper is re-created in place
 
     def engine(self, spec: ModelSpec, mode: str, env: Env):
         from .core.batched import BatchedBackend
@@ -166,18 +186,32 @@ class _BatchedEngineCache:
         base = _engines.engine(spec, mode, env)
         with self._lock:
             hit = self._store.get(key)
-            if hit is not None and hit.engine is base:
-                self._store.move_to_end(key)
-                return hit
+            if hit is not None:
+                if hit.engine is base:
+                    self._store.move_to_end(key)
+                    self.cache_hits += 1
+                    return hit
+                # staleness guard: the wrapped engine no longer matches
+                # the live compiled engine for this key — re-wrap, and
+                # count it as such (NOT as an eviction: the slot is
+                # reused, nothing else leaves the cache)
+                self.stale_rewraps += 1
+            else:
+                self.builds += 1
             eng = BatchedBackend(base)
             self._store[key] = eng
             while len(self._store) > self.maxsize:
                 self._store.popitem(last=False)
+                self.evictions += 1
             return eng
 
     def clear(self) -> None:
         with self._lock:
             self._store.clear()
+            self.builds = 0
+            self.cache_hits = 0
+            self.evictions = 0
+            self.stale_rewraps = 0
 
 
 _batched_engines = _BatchedEngineCache()
@@ -203,6 +237,10 @@ class _SeriesCache:
         self.maxsize = maxsize
         self._store: OrderedDict = OrderedDict()
         self._lock = threading.Lock()
+        self.builds = 0
+        self.cache_hits = 0
+        self.evictions = 0
+        self.regrows = 0          # same key rebuilt for a longer range
 
     def series(self, sc: "Scenario", steps: int) -> DecodeSeries:
         key = (sc.spec, sc.batch, sc.kv_len, _cfg_key(sc.cfg))
@@ -210,7 +248,12 @@ class _SeriesCache:
             hit = self._store.get(key)
             if hit is not None and hit.steps >= steps:
                 self._store.move_to_end(key)
+                self.cache_hits += 1
                 return hit
+            if hit is not None:
+                self.regrows += 1
+            else:
+                self.builds += 1
         series = DecodeSeries(
             lambda: _cache.builder(sc.spec, "decode").clone().graph,
             sc.spec, sc.cfg, batch=sc.batch, kv0=sc.kv_len, steps=steps,
@@ -219,11 +262,16 @@ class _SeriesCache:
             self._store[key] = series
             while len(self._store) > self.maxsize:
                 self._store.popitem(last=False)
+                self.evictions += 1
         return series
 
     def clear(self) -> None:
         with self._lock:
             self._store.clear()
+            self.builds = 0
+            self.cache_hits = 0
+            self.evictions = 0
+            self.regrows = 0
 
 
 _series = _SeriesCache()
@@ -232,11 +280,18 @@ _series = _SeriesCache()
 def graph_cache_stats() -> dict:
     """{'size', 'builds', 'hits'} of the process-wide (spec, mode) cache."""
     return {"size": len(_cache._store), "builds": _cache.builds,
-            "hits": _cache.hits}
+            "hits": _cache.hits, "evictions": _cache.evictions}
 
 
 def compiled_cache_stats() -> dict:
-    """Aggregate structure-class stats over all cached compiled engines."""
+    """Aggregate structure-class stats over all cached compiled engines,
+    plus per-cache hit/build/eviction telemetry.
+
+    ``batched_evictions`` (LRU pressure pushed an entry out) and
+    ``batched_stale_rewraps`` (the staleness guard re-wrapped a live key
+    whose underlying compiled engine changed) are counted DISTINCTLY —
+    conflating them hid base-engine churn behind apparent cache
+    pressure."""
     with _engines._lock:
         engines = list(_engines._store.values())
     agg = {"engines": len(engines), "classes": 0, "compiles": 0, "hits": 0,
@@ -245,6 +300,20 @@ def compiled_cache_stats() -> dict:
         s = e.stats()
         for k in ("classes", "compiles", "hits"):
             agg[k] += s[k]
+    agg.update({
+        "graph_builds": _cache.builds, "graph_hits": _cache.hits,
+        "graph_evictions": _cache.evictions,
+        "engine_builds": _engines.builds,
+        "engine_hits": _engines.cache_hits,
+        "engine_evictions": _engines.evictions,
+        "batched_builds": _batched_engines.builds,
+        "batched_hits": _batched_engines.cache_hits,
+        "batched_evictions": _batched_engines.evictions,
+        "batched_stale_rewraps": _batched_engines.stale_rewraps,
+        "series_builds": _series.builds, "series_hits": _series.cache_hits,
+        "series_evictions": _series.evictions,
+        "series_regrows": _series.regrows,
+    })
     return agg
 
 
@@ -523,8 +592,16 @@ class Scenario:
               rank_by: str = "step_time",
               resilience: Optional[ResilienceSpec] = None,
               search: str = "full",
+              progress: Optional[Callable] = None,
               **enum_kw) -> SweepResult:
         """One-shot DSE over every strategy for ``world`` devices (Fig 8).
+
+        ``progress`` is invoked as ``progress(done, total, skipped,
+        eta)`` as configs resolve — per config on the serial / thread /
+        batched paths (from worker threads when threaded: callbacks must
+        be thread-safe), per completed chunk on the process executor;
+        ``eta`` estimates remaining seconds from the running rate
+        (``None`` before the first completion).
 
         Enumerates power-of-two (dp, tp, cp, pp)[+FSDP] factorizations
         (``enum_kw`` forwards to
@@ -581,7 +658,8 @@ class Scenario:
                                          recompute=recompute,
                                          algorithms=algos or None,
                                          rank_by=rank_by,
-                                         resilience=resilience, **enum_kw)
+                                         resilience=resilience,
+                                         progress=progress, **enum_kw)
         src = _cache.builder(self.spec, self.mode)      # one assembly/mode
         if self.backend == "batched":
             engine = _batched_engines.engine(self.spec, self.mode, env)
@@ -589,25 +667,29 @@ class Scenario:
             engine = _engines.engine(self.spec, self.mode, env)
         else:
             engine = None
-        return dse_sweep(lambda: src.clone().graph, env, world, hw,
-                         n_layers=total_layers(self.spec),
-                         mem_limit_gb=mem_limit_gb, recompute=recompute,
-                         name=self.spec.name, backend=self.backend,
-                         engine=engine, workers=workers,
-                         algorithms=algos or None, rank_by=rank_by,
-                         resilience=resilience, search=search, **enum_kw)
+        with _span("scenario.sweep", spec=self.spec.name, world=world,
+                   backend=self.backend, search=search):
+            return dse_sweep(lambda: src.clone().graph, env, world, hw,
+                             n_layers=total_layers(self.spec),
+                             mem_limit_gb=mem_limit_gb, recompute=recompute,
+                             name=self.spec.name, backend=self.backend,
+                             engine=engine, workers=workers,
+                             algorithms=algos or None, rank_by=rank_by,
+                             resilience=resilience, search=search,
+                             progress=progress, **enum_kw)
 
     def _sweep_processes(self, world: int, hw: HardwareProfile, env: Env,
                          workers: int, *, mem_limit_gb, recompute,
                          algorithms=None, rank_by="step_time",
-                         resilience=None, **enum_kw) -> SweepResult:
+                         resilience=None, progress=None,
+                         **enum_kw) -> SweepResult:
         import multiprocessing
         import sys
         from concurrent.futures import ProcessPoolExecutor
 
         from .core.compiled import CompiledBackend
-        from .core.dse import (RANK_MODES, enumerate_configs, rank_points,
-                               score_resilience)
+        from .core.dse import (RANK_MODES, _Progress, enumerate_configs,
+                               rank_points, score_resilience)
 
         if rank_by not in RANK_MODES:
             raise ValueError(f"rank_by {rank_by!r} not in {RANK_MODES}")
@@ -631,7 +713,7 @@ class Scenario:
                               recompute=recompute, workers=workers,
                               executor="thread", algorithms=algorithms,
                               rank_by=rank_by, resilience=resilience,
-                              **enum_kw)
+                              progress=progress, **enum_kw)
         cfgs = list(enumerate_configs(world, **enum_kw))
         # partition by structure key: every class compiles in exactly one
         # worker (and fork inherits the warmed assembly cache for free)
@@ -644,12 +726,22 @@ class Scenario:
         for b in sorted(buckets.values(), key=len, reverse=True):
             min(chunks, key=len).extend(b)
         chunks = [c for c in chunks if c]
+        prog_cb = _Progress(progress, len(cfgs))
         with ProcessPoolExecutor(max_workers=len(chunks),
                                  mp_context=ctx) as pool:
+            from concurrent.futures import as_completed
             futs = [pool.submit(_sweep_chunk_worker, self, hw, c,
                                 mem_limit_gb, recompute, algorithms)
                     for c in chunks]
-            indexed = [r for f in futs for r in f.result()]
+            indexed = []
+            # per-chunk progress granularity: each worker resolves its
+            # whole share before reporting back
+            for f in as_completed(futs):
+                rows = f.result()
+                indexed.extend(rows)
+                prog_cb.tick(n=len(rows),
+                             skipped=sum(1 for _, r in rows
+                                         if not isinstance(r, DSEPoint)))
         indexed.sort(key=lambda r: r[0])         # enumeration order
         points = [r for _, r in indexed if isinstance(r, DSEPoint)]
         skipped = [r for _, r in indexed if not isinstance(r, DSEPoint)]
@@ -713,11 +805,12 @@ class Trace:
     def graph(self) -> Graph:
         if self._graph is None:
             sc = self.scenario
-            graph = sc.builder().graph
-            self._dist_report = distribute(graph, sc.cfg, self.env)
-            self._plan = apply_pipeline(graph, sc.cfg.pp,
-                                        total_layers(sc.spec),
-                                        vstages=sc.cfg.vstages)
+            with _span("trace.distribute", spec=sc.spec.name, mode=sc.mode):
+                graph = sc.builder().graph
+                self._dist_report = distribute(graph, sc.cfg, self.env)
+                self._plan = apply_pipeline(graph, sc.cfg.pp,
+                                            total_layers(sc.spec),
+                                            vstages=sc.cfg.vstages)
             self._graph = graph
         return self._graph
 
@@ -736,15 +829,18 @@ class Trace:
         if self._workload is None:
             sc = self.scenario
             name = sc.name or f"{sc.spec.name}/{sc.mode}"
-            if sc.backend in ("compiled", "batched"):
-                # numeric replay via the shared engine: no per-trace
-                # sympy substitution, and the structure class is reused
-                # across traces/sweeps with the same (spec, mode, env)
-                eng = _engines.engine(sc.spec, sc.mode, self.env)
-                self._workload = eng.workload(sc.cfg, name=name)
-            else:
-                self._workload = instantiate(self.graph, sc.cfg, self.env,
-                                             self.plan, name=name)
+            with _span("trace.instantiate", spec=sc.spec.name,
+                       backend=sc.backend):
+                if sc.backend in ("compiled", "batched"):
+                    # numeric replay via the shared engine: no per-trace
+                    # sympy substitution, and the structure class is reused
+                    # across traces/sweeps with the same (spec, mode, env)
+                    eng = _engines.engine(sc.spec, sc.mode, self.env)
+                    self._workload = eng.workload(sc.cfg, name=name)
+                else:
+                    self._workload = instantiate(self.graph, sc.cfg,
+                                                 self.env, self.plan,
+                                                 name=name)
         return self._workload
 
     # ---- analyses (memoized) -------------------------------------------
@@ -781,11 +877,14 @@ class Trace:
         key = (self._hw_key(hw), recompute, microbatches, schedule, vstages,
                tuple(sorted(algos.items())), pk)
         if key not in self._sim:
-            self._sim[key] = simulate(self.workload, hw, recompute=recompute,
-                                      microbatches=microbatches,
-                                      schedule=schedule, vstages=vstages,
-                                      algorithms=algos or None,
-                                      perturb=perturb)
+            with _span("trace.simulate", hw=hw.name,
+                       schedule=schedule or self.scenario.cfg.schedule):
+                self._sim[key] = simulate(self.workload, hw,
+                                          recompute=recompute,
+                                          microbatches=microbatches,
+                                          schedule=schedule, vstages=vstages,
+                                          algorithms=algos or None,
+                                          perturb=perturb)
         return self._sim[key]
 
     def memory(self, *, stage: int = 0, recompute: bool = False,
@@ -938,13 +1037,15 @@ class Trace:
         horizon.  Omitted, the export is byte-identical to before."""
         events, meta = self._resilience_export_args(resilience, hw,
                                                     resilience_steps)
-        return export_ranks(self.workload, out_dir, ranks,
-                            decompose_alltoall=decompose_alltoall,
-                            expand_microbatches=expand_microbatches,
-                            comm_model=self._comm_model(topology),
-                            resilience_events=events,
-                            resilience_meta=meta,
-                            on_stale=on_stale)
+        with _span("trace.export_chakra", out_dir=out_dir,
+                   expand=expand_microbatches):
+            return export_ranks(self.workload, out_dir, ranks,
+                                decompose_alltoall=decompose_alltoall,
+                                expand_microbatches=expand_microbatches,
+                                comm_model=self._comm_model(topology),
+                                resilience_events=events,
+                                resilience_meta=meta,
+                                on_stale=on_stale)
 
     def chakra_stage(self, stage: int = 0, *,
                      decompose_alltoall: bool = False,
@@ -959,6 +1060,60 @@ class Trace:
                             expand_microbatches=expand_microbatches,
                             comm_model=self._comm_model(topology),
                             resilience_events=events)
+
+    # ---- observability ---------------------------------------------------
+    def timeline(self, path: Optional[str] = None,
+                 hw: HardwareProfile = TPU_V5E, *,
+                 recompute: bool = False,
+                 microbatches: Optional[int] = None,
+                 schedule: Optional[str] = None,
+                 vstages: Optional[int] = None,
+                 algorithms: Optional[dict] = None,
+                 perturb=None,
+                 resilience=None, resilience_steps: int = 1000,
+                 memory: bool = False,
+                 detail: str = "comm") -> "Timeline":
+        """Perfetto/Chrome-trace timeline of the simulated execution:
+        one track per pipeline stage with microbatch-expanded schedule
+        slots, a comm stream of collective spans (algorithm/tier/bytes
+        from the scenario's cluster model), and explicit bubble spans —
+        every span from the same float arithmetic as :meth:`simulate`,
+        so per-track span sums reconcile exactly with
+        ``SimResult.step_time`` (:meth:`~repro.obs.Timeline.reconcile`).
+
+        ``path`` saves Chrome-trace JSON (open in ui.perfetto.dev);
+        the returned :class:`~repro.obs.Timeline` also derives a
+        :class:`~repro.obs.UtilizationReport` via ``.utilization()``.
+        What-if overrides (``schedule``/``microbatches``/``perturb``/…)
+        mirror :meth:`simulate`; ``resilience`` adds a failure/restore
+        epoch track (same forms as :meth:`export_chakra`); ``memory``
+        adds memory-over-time counters per stage; ``detail`` is
+        ``"comm"`` (default), ``"all"`` (per-op compute spans), or
+        ``"slots"``."""
+        from .obs.timeline import build_timeline
+        sc = self.scenario
+        hw = sc._effective_hw(hw)
+        algos = dict(sc.algorithms)
+        algos.update(algorithms or {})
+        events, _ = self._resilience_export_args(resilience, hw,
+                                                 resilience_steps)
+        mem = None
+        if memory:
+            mem = {s: self.memory(stage=s, recompute=recompute)
+                   for s in range(max(1, sc.cfg.pp))}
+        with _span("trace.timeline", hw=hw.name,
+                   schedule=schedule or sc.cfg.schedule):
+            tl = build_timeline(self.workload, hw, recompute=recompute,
+                                microbatches=microbatches,
+                                schedule=schedule, vstages=vstages,
+                                algorithms=algos or None,
+                                perturb=perturb,
+                                resilience_events=events,
+                                memory=mem, detail=detail,
+                                label=sc.describe())
+        if path:
+            tl.save(path)
+        return tl
 
     # ---- static verification --------------------------------------------
     def verify(self, *, include_graph: Optional[bool] = None,
@@ -1182,6 +1337,11 @@ class Job:
         stretches of the per-step time, pinned-error subdivision at
         breakpoints).  For disaggregated jobs the prefill→decode KV
         handoff is charged at :attr:`kv_transfer_bw`."""
+        with _span("job.evaluate", phases=len(self.phases),
+                   disaggregated=self.disaggregated):
+            return self._evaluate(hw)
+
+    def _evaluate(self, hw: HardwareProfile) -> JobResult:
         phases_out: list[PhaseResult] = []
         evals = {"lowerings": 0, "samples": 0, "trace_sims": 0}
         ttft = None
@@ -1258,6 +1418,20 @@ class Job:
             kv_transfer_bytes=kv_bytes, kv_transfer_time=kv_time,
             disaggregated=self.disaggregated, engine_evals=evals,
             label=self.describe())
+
+    def timeline(self, path: Optional[str] = None,
+                 hw: HardwareProfile = TPU_V5E) -> "Timeline":
+        """Pool-lane Perfetto timeline of this job's evaluated phase
+        program: one lane per pool (prefill / decode / both on one for
+        colocated jobs), phase spans annotated with mode / steps /
+        per-step times / peak memory, and — for disaggregated jobs — an
+        explicit kv-transfer lane for the prefill→decode handoff.
+        ``path`` saves Chrome-trace JSON (open in ui.perfetto.dev)."""
+        from .obs.timeline import job_timeline
+        tl = job_timeline(self.evaluate(hw))
+        if path:
+            tl.save(path)
+        return tl
 
     # ---- DSE ------------------------------------------------------------
     def sweep(self, world: int, hw: HardwareProfile = TPU_V5E, *,

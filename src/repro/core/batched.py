@@ -62,6 +62,9 @@ from typing import Optional
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs.log import get_logger
+from ..obs.spans import span as _span
 from .compiled import _PER_RANK_COLLS, _RING_COLLS, CompiledBackend, \
     CostProgram
 from .distribute import ParallelCfg
@@ -71,6 +74,8 @@ from .simulate import SimResult
 from .tensor import DTYPE_BYTES
 
 __all__ = ["BatchedBackend", "REPLAYABLE_SCHEDULES"]
+
+_log = get_logger("core.batched")
 
 # schedules whose replay order is duration-independent (zb-h1 backfills
 # weight-grad slots into gaps whose existence depends on the durations)
@@ -648,10 +653,13 @@ class BatchedBackend:
             kern = self._kernels.get(key)
             if kern is None:
                 _, pp, vstages, schedule, mb, recompute = key
-                kern = _ClassKernel(prog, axes, pp, vstages,
-                                    schedule or "1f1b", mb, recompute,
-                                    dtype=self.dtype)
+                with _span("batched.kernel_build", pp=pp,
+                           schedule=schedule or ""):
+                    kern = _ClassKernel(prog, axes, pp, vstages,
+                                        schedule or "1f1b", mb, recompute,
+                                        dtype=self.dtype)
                 self._kernels[key] = kern
+                _metrics.counter("batched.kernel_builds").inc()
             return kern
 
     def supports(self, cfg: ParallelCfg, hw, algorithms=None) -> bool:
@@ -671,32 +679,51 @@ class BatchedBackend:
         failure — the fallback re-raises the real error per config)."""
         out: list = [None] * len(cfgs)
         if getattr(hw, "topology", None) is not None:
+            _log.debug("profile %s has a topology: all %d cfgs fall back "
+                       "to the compiled path", getattr(hw, "name", "?"),
+                       len(cfgs))
+            _metrics.counter("batched.fallback_topology").inc(len(cfgs))
             return out
         buckets: dict = {}
-        for i, cfg in enumerate(cfgs):
-            pp = max(1, cfg.pp)
-            if pp > 1 and cfg.schedule not in REPLAYABLE_SCHEDULES:
-                continue
-            try:
-                prog = self.engine.program(cfg)
-            except Exception:
-                continue                        # per-config path reports it
-            vstages = max(1, getattr(cfg, "vstages", 1)) if pp > 1 else 1
-            key = (id(prog), pp, vstages,
-                   cfg.schedule if pp > 1 else "",
-                   cfg.microbatches if pp > 1 else 0, recompute)
-            buckets.setdefault(key, (prog, []))[1].append(i)
-        # dispatch every bucket before harvesting any: the device chews
-        # through kernel i+1 while Python assembles rows for kernel i
-        pend = []
-        for key, (prog, idxs) in buckets.items():
-            axes = tuple(sorted(cfgs[idxs[0]].axes))
-            kern = self._kernel(prog, axes, key)
-            pend.append((kern, idxs, self._dispatch(kern, cfgs, idxs, hw)))
-            self.batch_sizes.append(len(idxs))
-            self.points += len(idxs)
-        for kern, idxs, res in pend:
-            self._harvest(kern, cfgs, idxs, res, out)
+        sched_skips = 0
+        with _span("batched.evaluate_many", cfgs=len(cfgs)):
+            for i, cfg in enumerate(cfgs):
+                pp = max(1, cfg.pp)
+                if pp > 1 and cfg.schedule not in REPLAYABLE_SCHEDULES:
+                    sched_skips += 1
+                    continue
+                try:
+                    prog = self.engine.program(cfg)
+                except Exception as e:
+                    # per-config path reports it
+                    _log.debug("cfg %d (%s): lowering failed (%s: %s) -> "
+                               "compiled fallback", i, cfg.axes,
+                               type(e).__name__, e)
+                    _metrics.counter("batched.fallback_lowering").inc()
+                    continue
+                vstages = max(1, getattr(cfg, "vstages", 1)) if pp > 1 else 1
+                key = (id(prog), pp, vstages,
+                       cfg.schedule if pp > 1 else "",
+                       cfg.microbatches if pp > 1 else 0, recompute)
+                buckets.setdefault(key, (prog, []))[1].append(i)
+            if sched_skips:
+                _log.debug("%d cfgs on non-replayable schedules (zb-h1) "
+                           "-> compiled fallback", sched_skips)
+                _metrics.counter("batched.fallback_schedule").inc(sched_skips)
+            # dispatch every bucket before harvesting any: the device chews
+            # through kernel i+1 while Python assembles rows for kernel i
+            pend = []
+            for key, (prog, idxs) in buckets.items():
+                axes = tuple(sorted(cfgs[idxs[0]].axes))
+                kern = self._kernel(prog, axes, key)
+                pend.append((kern, idxs,
+                             self._dispatch(kern, cfgs, idxs, hw)))
+                self.batch_sizes.append(len(idxs))
+                self.points += len(idxs)
+                _metrics.counter("batched.kernel_calls").inc()
+                _metrics.histogram("batched.batch_size").observe(len(idxs))
+            for kern, idxs, res in pend:
+                self._harvest(kern, cfgs, idxs, res, out)
         return out
 
     def _dispatch(self, kern: _ClassKernel, cfgs: list, idxs: list, hw

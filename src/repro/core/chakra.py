@@ -31,6 +31,7 @@ from typing import Iterable, Optional
 
 from typing import TYPE_CHECKING
 
+from ..obs.spans import span as _span
 from .instantiate import NodeRec, Workload
 from .schedules import BWD, BWD_IN, BWD_W, FWD, build_schedule
 
@@ -490,13 +491,14 @@ def export_ranks(w: Workload, out_dir: str, ranks: Optional[Iterable[int]] = Non
     emitted = [f"rank{r}.json" for r in rank_list] + ["manifest.json"]
     _prepare_out_dir(out_dir, emitted, on_stale)
     # pre-serialized stage bodies, open at the tail: '{... "nodes": [...]'
-    stage_body = {
-        s: json.dumps(export_stage(
-            w, s, decompose_alltoall=decompose_alltoall,
-            expand_microbatches=expand_microbatches,
-            comm_model=comm_model,
-            resilience_events=resilience_events))[:-1]
-        for s in range(w.stages)}
+    with _span("chakra.serialize_stages", stages=w.stages):
+        stage_body = {
+            s: json.dumps(export_stage(
+                w, s, decompose_alltoall=decompose_alltoall,
+                expand_microbatches=expand_microbatches,
+                comm_model=comm_model,
+                resilience_events=resilience_events))[:-1]
+            for s in range(w.stages)}
     count = 0
     for rank in rank_list:
         coords = rank_coords(rank, cfg)

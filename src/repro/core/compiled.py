@@ -42,6 +42,8 @@ from typing import Callable, Optional
 import numpy as np
 import sympy as sp
 
+from ..obs import metrics as _metrics
+from ..obs.spans import span as _span
 from .distribute import DistReport, ParallelCfg, distribute, guards_match, \
     record_guards
 from .graphdist import _stage_for_tags
@@ -733,14 +735,17 @@ class CompiledBackend:
             for prog in self._classes.get(key, ()):
                 if guards_match(prog.guards, cfg):
                     self.hits += 1
+                    _metrics.counter("compiled.class_hits").inc()
                     return prog
-            graph = self.build()
-            with record_guards() as guards:
-                report = distribute(graph, cfg, self.env)
-            prog = CostProgram(graph, self.env, n_layers=self.n_layers,
-                               guards=dict(guards), report=report)
+            with _span("compiled.lower", axes=tuple(sorted(cfg.axes))):
+                graph = self.build()
+                with record_guards() as guards:
+                    report = distribute(graph, cfg, self.env)
+                prog = CostProgram(graph, self.env, n_layers=self.n_layers,
+                                   guards=dict(guards), report=report)
             self._classes.setdefault(key, []).append(prog)
             self.compiles += 1
+            _metrics.counter("compiled.class_compiles").inc()
             return prog
 
     def workload(self, cfg: ParallelCfg, name: str = "workload") -> Workload:

@@ -34,10 +34,15 @@ callers that need a custom ``build`` (a plain
 from __future__ import annotations
 
 import itertools
+import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
 
+from ..obs import metrics as _metrics
+from ..obs.log import get_logger
+from ..obs.spans import span as _span
 from .compiled import _PER_RANK_COLLS, _RING_COLLS, CompiledBackend
 from .costmodel import HardwareProfile, TPU_V5E
 from .distribute import ParallelCfg, distribute
@@ -48,6 +53,39 @@ from .memory import MemoryReport, peak_memory
 from .simulate import SimResult, simulate
 from .symbolic import Env, sym
 from .topology import normalize_placement
+
+_log = get_logger("core.dse")
+
+
+class _Progress:
+    """Thread-safe sweep progress fan-out for ``sweep(progress=...)``.
+
+    Invokes the callback as ``progress(done, total, skipped, eta)`` after
+    every completed unit (one config, or one chunk on the process path):
+    ``done`` counts configs resolved either way, ``skipped`` the subset
+    rejected as infeasible, ``eta`` the remaining-seconds estimate from
+    the running rate (``None`` until the first completion).  Callback
+    exceptions propagate — a broken progress bar should fail loudly, not
+    corrupt the sweep silently."""
+
+    def __init__(self, callback: Optional[Callable], total: int):
+        self.callback = callback
+        self.total = total
+        self.done = 0
+        self.skipped = 0
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+
+    def tick(self, n: int = 1, skipped: int = 0) -> None:
+        if self.callback is None:
+            return
+        with self._lock:
+            self.done += n
+            self.skipped += skipped
+            done, total, sk = self.done, self.total, self.skipped
+            elapsed = time.perf_counter() - self._t0
+        eta = (elapsed / done) * (total - done) if done else None
+        self.callback(done, total, sk, eta)
 
 
 @dataclass
@@ -180,13 +218,18 @@ class SweepResult(list):
             bits.append(f"{len(self.skipped)} skipped ({pruned})")
         es = self.engine_stats
         if es:
+            lookups = es["compiles"] + es["hits"]
+            ratio = (es["hits"] / lookups) if lookups else 0.0
             bits.append(f"engine: {es['classes']} structure class(es), "
-                        f"{es['compiles']} compile(s), {es['hits']} hit(s)")
+                        f"{es['compiles']} compile(s), {es['hits']} hit(s) "
+                        f"({100.0 * ratio:.0f}% hit ratio)")
         bs = self.batch_stats
         if bs and bs.get("batch_sizes"):
             sizes = bs["batch_sizes"]
+            mean = sum(sizes) / len(sizes)
             bits.append(f"batched: {bs['points']} point(s) in "
-                        f"{len(sizes)} batch(es), max batch {max(sizes)}")
+                        f"{len(sizes)} kernel call(s), batch sizes "
+                        f"mean {mean:.1f} / max {max(sizes)}")
         return "; ".join(bits)
 
 
@@ -587,7 +630,9 @@ def branch_and_bound(engine: CompiledBackend, cfgs: list,
                      name: str = "dse", algorithms: Optional[dict] = None,
                      verify: bool = False,
                      mem_limit_gb: Optional[float] = None,
-                     resilience=None) -> tuple[list, list, int]:
+                     resilience=None,
+                     progress: "Optional[_Progress]" = None
+                     ) -> tuple[list, list, int]:
     """Pruned search over the config lattice; returns
     ``(evaluated points, skipped, visited)`` with the exhaustive Pareto
     front guaranteed to be a subset of the evaluated points.
@@ -618,7 +663,10 @@ def branch_and_bound(engine: CompiledBackend, cfgs: list,
         try:
             prog = engine.program(cfg)
         except InfeasibleConfigError as e:
+            _log.debug("bnb skipped %s: %s", cfg.describe(), e)
             skipped.append(_skip(cfg, e, verify=verify))
+            if progress is not None:
+                progress.tick(skipped=1)
             continue
         key = (id(prog), tuple(sorted(cfg.axes.items())), max(1, cfg.pp),
                getattr(cfg, "vstages", 1))
@@ -655,6 +703,9 @@ def branch_and_bound(engine: CompiledBackend, cfgs: list,
             slb_ms = _step_lb(cfg, floor) * 1e3
             mem_gb = prog.peak_memory(cfg, recompute=recompute).peak_gb
             if archive.prunes((slb_ms, mem_gb, slb_ms)):
+                _metrics.counter("dse.bnb_pruned").inc()
+                if progress is not None:
+                    progress.tick()
                 continue
             visited += 1
             try:
@@ -663,7 +714,10 @@ def branch_and_bound(engine: CompiledBackend, cfgs: list,
                                              name=name, reuse=True,
                                              algorithms=algorithms)
             except InfeasibleConfigError as e:
+                _log.debug("bnb skipped %s: %s", cfg.describe(), e)
                 skipped.append(_skip(cfg, e, verify=verify))
+                if progress is not None:
+                    progress.tick(skipped=1)
                 continue
             if resilience is not None:
                 score_resilience([pt], resilience, hw)
@@ -671,6 +725,8 @@ def branch_and_bound(engine: CompiledBackend, cfgs: list,
                 pt.label += " (OOM)"
             points.append(pt)
             archive.add(_objective(pt))
+            if progress is not None:
+                progress.tick()
     return points, skipped, visited
 
 
@@ -713,8 +769,15 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
           rank_by: str = "step_time",
           resilience=None,
           search: str = "full",
+          progress: Optional[Callable] = None,
           **enum_kw) -> SweepResult:
     """Evaluate every enumerated strategy; see module docstring.
+
+    ``progress`` is called as ``progress(done, total, skipped, eta)``
+    after every resolved config (done counts both evaluated and skipped;
+    eta is the remaining-seconds estimate, ``None`` before the first
+    completion) — from worker threads on the threaded path, so callbacks
+    must be thread-safe.
 
     ``workers`` > 1 evaluates config chunks on a thread pool (results
     are identical and identically ordered to the serial run); ``engine``
@@ -780,25 +843,39 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
     # cheap pre-dispatch feasibility pass: infeasible factorizations are
     # counted and skipped-with-reason without consuming executor slots
     batch = env.get(sym("B"))
+    prog_cb = _Progress(progress, len(cfgs))
     prefiltered, feasible = [], []
     for cfg in cfgs:
         try:
             cfg.validate_workload(batch=batch)
         except InfeasibleConfigError as e:
+            _log.debug("prefiltered %s: %s", cfg.describe(), e)
             prefiltered.append(_skip(cfg, e, prefiltered=True,
                                      verify=verify))
         else:
             feasible.append(cfg)
     cfgs = feasible
+    if prefiltered:
+        _log.debug("prefilter dropped %d of %d config(s) before dispatch",
+                   len(prefiltered), prog_cb.total)
+        _metrics.counter("dse.prefiltered").inc(len(prefiltered))
+        prog_cb.tick(n=len(prefiltered), skipped=len(prefiltered))
 
     serial = not (workers and workers > 1) or backend == "batched"
 
     def eval_one(cfg: ParallelCfg):
-        return evaluate_or_skip(
+        r = evaluate_or_skip(
             cfg, env=env, hw=hw, n_layers=n_layers, name=name,
             engine=engine, build=build if backend == "sympy" else None,
             recompute=recompute, mem_limit_gb=mem_limit_gb, reuse=serial,
             algorithms=algorithms, verify=verify)
+        if isinstance(r, SkippedConfig):
+            _log.debug("skipped %s: %s", cfg.describe(), r.reason)
+            _metrics.counter("dse.skipped").inc()
+        else:
+            _metrics.counter("dse.points").inc()
+        prog_cb.tick(skipped=1 if isinstance(r, SkippedConfig) else 0)
+        return r
 
     def _stats():
         return {"engine_stats": engine.stats() if engine is not None
@@ -810,7 +887,8 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
         points, bnb_skips, visited = branch_and_bound(
             engine, cfgs, hw, recompute=recompute, name=name,
             algorithms=algorithms, verify=verify,
-            mem_limit_gb=mem_limit_gb, resilience=resilience)
+            mem_limit_gb=mem_limit_gb, resilience=resilience,
+            progress=prog_cb)
         front = pareto_front(points)
         rank_points(front, rank_by)
         return SweepResult(front, prefiltered + bnb_skips, backend=backend,
@@ -836,6 +914,8 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
                 if mem_limit_gb is not None and pt.peak_gb > mem_limit_gb:
                     pt.label += " (OOM)"
                 results.append(pt)
+                _metrics.counter("dse.points").inc()
+                prog_cb.tick()
     elif workers and workers > 1 and len(cfgs) > 1:
         chunks = [cfgs[i:i + chunk_size]
                   for i in range(0, len(cfgs), chunk_size)]

@@ -239,7 +239,8 @@ def _dep_key(slot: Slot, chunks: int):
     return ("b", slot.mb, slot.vstage)           # bwd_w after own bwd_in
 
 
-def replay(sched: Schedule, duration: Callable[[Slot], float]) -> ReplayResult:
+def replay(sched: Schedule, duration: Callable[[Slot], float],
+           record: list | None = None) -> ReplayResult:
     """Event-driven replay of the schedule timelines.
 
     Each stage issues its fwd/bwd slots strictly in order (one execution
@@ -252,7 +253,13 @@ def replay(sched: Schedule, duration: Callable[[Slot], float]) -> ReplayResult:
     idle waiting for a cross-stage dependency, and any leftovers drain
     after the stage's last in-order slot.  Durations are microbatch-
     independent, so ``duration`` is consulted once per (kind, vstage)
-    and memoized here."""
+    and memoized here.
+
+    ``record``, when given, receives ``(stage, slot, start, end)`` for
+    every executed slot — including backfilled ``bwd_w`` work at its
+    actual execution window — from the *same* float arithmetic that
+    produces the makespan, so timelines built from it reconcile with
+    :class:`~repro.core.simulate.SimResult` exactly (repro.obs)."""
     pp = sched.pp
     chunks = sched.chunks
     dur_cache: dict = {}
@@ -279,7 +286,7 @@ def replay(sched: Schedule, duration: Callable[[Slot], float]) -> ReplayResult:
                 if slot.kind == BWD_W:
                     # static position guarantees its bwd_in already ran;
                     # execution is deferred to the next idle gap
-                    pending[s].append(dur(slot))
+                    pending[s].append((slot, dur(slot)))
                     ptr[s] += 1
                     remaining -= 1
                     progressed = True
@@ -289,8 +296,10 @@ def replay(sched: Schedule, duration: Callable[[Slot], float]) -> ReplayResult:
                     break
                 ready = finish[dep] if dep is not None else 0.0
                 # backfill weight grads that fit entirely in the idle gap
-                while pending[s] and free[s] + pending[s][0] <= ready:
-                    d = pending[s].pop(0)
+                while pending[s] and free[s] + pending[s][0][1] <= ready:
+                    wslot, d = pending[s].pop(0)
+                    if record is not None:
+                        record.append((s, wslot, free[s], free[s] + d))
                     free[s] += d
                     busy[s] += d
                 d = dur(slot)
@@ -300,6 +309,8 @@ def replay(sched: Schedule, duration: Callable[[Slot], float]) -> ReplayResult:
                     finish[("f", slot.mb, slot.vstage)] = end
                 else:
                     finish[("b", slot.mb, slot.vstage)] = end
+                if record is not None:
+                    record.append((s, slot, start, end))
                 free[s] = end
                 busy[s] += d
                 ptr[s] += 1
@@ -310,7 +321,9 @@ def replay(sched: Schedule, duration: Callable[[Slot], float]) -> ReplayResult:
                 f"pipeline schedule {sched.name!r} deadlocked at "
                 f"{[sched.timelines[s][ptr[s]] if ptr[s] < len(sched.timelines[s]) else None for s in range(pp)]}")
     for s in range(pp):                               # drain leftover bwd_w
-        for d in pending[s]:
+        for wslot, d in pending[s]:
+            if record is not None:
+                record.append((s, wslot, free[s], free[s] + d))
             free[s] += d
             busy[s] += d
     return ReplayResult(makespan=max(free), finish=free, busy=busy)

@@ -34,7 +34,7 @@ from typing import Optional
 from .collectives import CollectiveModel, comm_model
 from .costmodel import HardwareProfile
 from .instantiate import NodeRec, Workload
-from .schedules import BWD, BWD_IN, BWD_W, FWD, build_schedule, replay
+from .schedules import BWD, BWD_IN, BWD_W, FWD, Slot, build_schedule, replay
 
 
 @dataclass
@@ -68,6 +68,44 @@ class SimResult:
     @property
     def ms(self) -> float:
         return self.step_time * 1e3
+
+
+@dataclass
+class TimelineRecorder:
+    """Raw material for :func:`repro.obs.timeline.build_timeline`.
+
+    Passed as ``simulate(..., record=rec)``, it captures — from the
+    exact float arithmetic that produces ``SimResult.step_time`` —
+
+    * ``placements``: replayed ``(stage, Slot, start, end)`` windows
+      (pp > 1; synthesized ``[k·span, (k+1)·span]`` slots for pp == 1),
+    * ``node_events``: per-``(kind, chunk)`` slot-body node schedules
+      ``(node, stream, start, end)`` relative to the slot's own zero
+      and UNSCALED by straggler multipliers (see ``multipliers``),
+    * ``slot_durs`` / ``opt_spans``: the (scaled) spans the replay and
+      the step-time formula consumed,
+
+    so a timeline built from it reconciles with the step time *by
+    construction* — no parallel re-implementation of the cost model.
+    Both evaluation backends share :func:`simulate`, hence one recorder
+    serves both."""
+    placements: list = field(default_factory=list)   # (stage, Slot, start, end)
+    node_events: dict = field(default_factory=dict)  # (kind, chunk) -> [(node, stream, t0, t1)]
+    slot_durs: dict = field(default_factory=dict)    # (kind, chunk) -> span (scaled)
+    opt_events: dict = field(default_factory=dict)   # stage -> [(node, stream, t0, t1)]
+    opt_spans: dict = field(default_factory=dict)    # stage -> span (scaled)
+    multipliers: Optional[tuple] = None              # per-stage straggler dilation
+    sched_name: str = ""
+    pp: int = 1
+    vstages: int = 1
+    microbatches: int = 0
+    stages: int = 1
+    makespan: float = 0.0                            # microbatch portion end
+    step_time: float = 0.0
+    result: Optional[SimResult] = None
+
+    def stage_of(self, chunk: int) -> int:
+        return chunk % self.pp
 
 
 def sum_convex_series(f, lo: int, hi: int, *, rel_tol: float = 1e-9,
@@ -121,7 +159,8 @@ def sum_convex_series(f, lo: int, hi: int, *, rel_tol: float = 1e-9,
 
 
 def _schedule(nodes: list[NodeRec], hw: HardwareProfile,
-              model: Optional[CollectiveModel] = None
+              model: Optional[CollectiveModel] = None,
+              events: list | None = None
               ) -> tuple[float, float, float]:
     """List-schedule on {compute, comm} streams; returns
     (makespan, compute_busy, comm_busy).
@@ -137,7 +176,12 @@ def _schedule(nodes: list[NodeRec], hw: HardwareProfile,
     config's placement (it assumes innermost-contiguous groups), so on a
     topology profile with a non-default placement pass
     ``comm_model(hw, cfg)`` explicitly to match what ``simulate``
-    charges; on flat profiles the default is exactly equivalent."""
+    charges; on flat profiles the default is exactly equivalent.
+
+    ``events``, when a list, receives ``(node, stream, start, end)`` for
+    every scheduled node (stream ``"comp"``/``"comm"``, times relative
+    to the slot body's own zero) — the node-level raw material for
+    repro.obs timelines."""
     if model is None:
         model = comm_model(hw)
     time_of = model.time_of
@@ -160,6 +204,8 @@ def _schedule(nodes: list[NodeRec], hw: HardwareProfile,
             end = start + dur
             free_comm = end
             busy_comm += dur
+            if events is not None:
+                events.append((n, "comm", start, end))
         else:
             flops = n.flops
             t_flops = flops / (peak * eff.get(n.category, 0.9)) if flops else 0.0
@@ -169,15 +215,18 @@ def _schedule(nodes: list[NodeRec], hw: HardwareProfile,
             end = start + dur
             free_comp = end
             busy_comp += dur
+            if events is not None:
+                events.append((n, "comp", start, end))
         finish[n.uid] = end
     makespan = free_comp if free_comp > free_comm else free_comm
     return makespan, busy_comp, busy_comm
 
 
 def _span3(nodes: list[NodeRec], hw: HardwareProfile,
-           model: CollectiveModel) -> tuple[float, float, float, float]:
+           model: CollectiveModel, events: list | None = None
+           ) -> tuple[float, float, float, float]:
     """(span, compute busy, comm busy, exposed comm) for one slot body."""
-    span, cbusy, mbusy = _schedule(nodes, hw, model)
+    span, cbusy, mbusy = _schedule(nodes, hw, model, events)
     return span, cbusy, mbusy, max(0.0, span - cbusy)
 
 
@@ -208,7 +257,8 @@ def simulate(w: Workload, hw: HardwareProfile, *,
              vstages: int | None = None,
              algorithms: dict | None = None,
              model: CollectiveModel | None = None,
-             perturb=None) -> SimResult:
+             perturb=None,
+             record: TimelineRecorder | None = None) -> SimResult:
     """Analytic step time under ``w.cfg``'s pipeline schedule.
 
     ``schedule``/``vstages``/``microbatches`` override the config's
@@ -231,7 +281,11 @@ def simulate(w: Workload, hw: HardwareProfile, *,
     the per-slot durations BEFORE the schedule replay, so both
     evaluation backends (which share this function) stay bit-identical
     under perturbation by construction; ``perturb=None`` leaves every
-    code path untouched."""
+    code path untouched.
+
+    ``record`` (a :class:`TimelineRecorder`) captures slot placements
+    and node-level stream events for repro.obs timeline export; it adds
+    only ``record is not None`` checks to the hot paths."""
     cfg = w.cfg
     if model is None:
         model = comm_model(hw, cfg, algorithms)
@@ -244,7 +298,8 @@ def simulate(w: Workload, hw: HardwareProfile, *,
 
     if pp <= 1:
         return _simulate_single(w, hw, mb, recompute, sched_name, model,
-                                mult=mults[0] if mults else 1.0)
+                                mult=mults[0] if mults else 1.0,
+                                record=record)
     if v != wl_v or (sched_name != "interleaved" and wl_v > 1):
         raise ValueError(
             f"schedule override {sched_name!r}/vstages={v} does not match "
@@ -270,8 +325,11 @@ def simulate(w: Workload, hw: HardwareProfile, *,
                 opt_nodes.append(n)
         m = mults[s] if mults else 1.0
 
-        def span3(nodes):
-            sp, cb, mz, ex = _span3(nodes, hw, model)
+        def span3(nodes, key=None):
+            ev = None
+            if record is not None and key is not None:
+                ev = record.node_events.setdefault(key, [])
+            sp, cb, mz, ex = _span3(nodes, hw, model, ev)
             if m != 1.0:        # straggler-paced stage: every slot dilates
                 return sp * m, cb * m, mz * m, ex * m
             return sp, cb, mz, ex
@@ -280,7 +338,7 @@ def simulate(w: Workload, hw: HardwareProfile, *,
         for c in sorted(set(fwd_c) | set(bwd_c)):
             fwd = fwd_c.get(c, [])
             bwd = bwd_c.get(c, [])
-            f_span, f_cb, f_mb, f_exp = span3(fwd)
+            f_span, f_cb, f_mb, f_exp = span3(fwd, (FWD, c))
             dur[(FWD, c)] = f_span
             if recompute:
                 # activation recompute re-runs the forward during backward
@@ -288,21 +346,24 @@ def simulate(w: Workload, hw: HardwareProfile, *,
             if split_bwd:
                 b_in = [n for n in bwd if not n.wgrad]
                 b_w = [n for n in bwd if n.wgrad]
-                bi_span, bi_cb, bi_mb, bi_exp = span3(b_in)
-                bw_span, bw_cb, bw_mb, bw_exp = span3(b_w)
+                bi_span, bi_cb, bi_mb, bi_exp = span3(b_in, (BWD_IN, c))
+                bw_span, bw_cb, bw_mb, bw_exp = span3(b_w, (BWD_W, c))
                 dur[(BWD_IN, c)] = bi_span
                 dur[(BWD_W, c)] = bw_span
                 b_span = bi_span + bw_span
                 b_cb, b_mb, b_exp = bi_cb + bw_cb, bi_mb + bw_mb, bi_exp + bw_exp
             else:
-                b_span, b_cb, b_mb, b_exp = span3(bwd)
+                b_span, b_cb, b_mb, b_exp = span3(bwd, (BWD, c))
                 dur[(BWD, c)] = b_span
             t_fwd += f_span
             t_bwd += b_span
             cbusy += f_cb + b_cb
             mbusy += f_mb + b_mb
             exposed += f_exp + b_exp
-        opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw, model)
+        opt_events = None
+        if record is not None:
+            opt_events = record.opt_events.setdefault(s, [])
+        opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw, model, opt_events)
         if m != 1.0:
             opt_span, ocbusy, ombusy = opt_span * m, ocbusy * m, ombusy * m
         stage_sims.append(StageSim(
@@ -311,15 +372,28 @@ def simulate(w: Workload, hw: HardwareProfile, *,
             opt_compute=ocbusy, opt_comm=ombusy,
             opt_exposed=max(0.0, opt_span - ocbusy)))
 
-    rep = replay(sched, lambda slot: dur.get((slot.kind, slot.vstage), 0.0))
+    rep = replay(sched, lambda slot: dur.get((slot.kind, slot.vstage), 0.0),
+                 record.placements if record is not None else None)
     t_opt = max(s.t_opt for s in stage_sims)
     step = rep.makespan + t_opt
-    return _result(step, mb, stage_sims, rep.bubble_fraction, sched_name)
+    res = _result(step, mb, stage_sims, rep.bubble_fraction, sched_name)
+    if record is not None:
+        record.slot_durs = dict(dur)
+        record.opt_spans = {i: st.t_opt for i, st in enumerate(stage_sims)}
+        record.multipliers = mults
+        record.sched_name = sched_name
+        record.pp, record.vstages, record.microbatches = pp, v, mb
+        record.stages = w.stages
+        record.makespan = rep.makespan
+        record.step_time = step
+        record.result = res
+    return res
 
 
 def _simulate_single(w: Workload, hw: HardwareProfile, mb: int,
                      recompute: bool, sched_name: str,
-                     model: CollectiveModel, mult: float = 1.0) -> SimResult:
+                     model: CollectiveModel, mult: float = 1.0,
+                     record: "TimelineRecorder | None" = None) -> SimResult:
     """pp == 1: no pipeline — one combined fwd+bwd span per microbatch
     (kept on the exact pre-schedule-refactor arithmetic: the bulk of any
     DSE sweep is pp == 1 points and this is their hot path)."""
@@ -329,8 +403,12 @@ def _simulate_single(w: Workload, hw: HardwareProfile, mb: int,
         extra = [n for n in nodes if n.phase == "fwd" and n.comm is None]
         mb_nodes = mb_nodes + extra
     opt_nodes = [n for n in nodes if n.phase == "opt"]
-    span, cbusy, mbusy = _schedule(mb_nodes, hw, model)
-    opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw, model)
+    mb_events = opt_events = None
+    if record is not None:
+        mb_events = record.node_events.setdefault((FWD, 0), [])
+        opt_events = record.opt_events.setdefault(0, [])
+    span, cbusy, mbusy = _schedule(mb_nodes, hw, model, mb_events)
+    opt_span, ocbusy, ombusy = _schedule(opt_nodes, hw, model, opt_events)
     if mult != 1.0:             # the slowest rank paces the whole step
         span, cbusy, mbusy = span * mult, cbusy * mult, mbusy * mult
         opt_span, ocbusy, ombusy = (opt_span * mult, ocbusy * mult,
@@ -342,7 +420,22 @@ def _simulate_single(w: Workload, hw: HardwareProfile, mb: int,
         opt_compute=ocbusy, opt_comm=ombusy,
         opt_exposed=max(0.0, opt_span - ocbusy))
     step = mb * span + opt_span
-    return _result(step, mb, [st], 0.0, sched_name)
+    res = _result(step, mb, [st], 0.0, sched_name)
+    if record is not None:
+        # slots tile [0, M·span]: slot k at [k·span, (k+1)·span], so the
+        # last end is the SAME float product M·span the step formula uses
+        record.placements = [(0, Slot(FWD, k, 0), k * span, (k + 1) * span)
+                             for k in range(mb)]
+        record.slot_durs = {(FWD, 0): span}
+        record.opt_spans = {0: opt_span}
+        record.multipliers = (mult,) if mult != 1.0 else None
+        record.sched_name = sched_name
+        record.pp, record.vstages, record.microbatches = 1, 1, mb
+        record.stages = 1
+        record.makespan = mb * span
+        record.step_time = step
+        record.result = res
+    return res
 
 
 def _result(step: float, mb: int, stage_sims: list[StageSim],

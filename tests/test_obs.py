@@ -1,0 +1,375 @@
+"""Observability layer tests: self-profiling spans, the metrics
+registry, REPRO_LOG logging, cache-stat taxonomy (eviction vs staleness
+re-wrap), sweep progress callbacks, and the ``repro.obs`` CLI."""
+import json
+import logging
+import threading
+
+import pytest
+
+from repro import Scenario, compiled_cache_stats
+from repro.configs import get
+from repro.obs import diff, profiled, snapshot, span, take_events, traced
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    obs_spans.disable()
+    obs_spans.take_events()
+    obs_metrics.reset()
+    yield
+    obs_spans.disable()
+    obs_spans.take_events()
+    obs_metrics.reset()
+
+
+SPEC = get("minitron-8b").smoke
+
+
+# --------------------------------------------------------------------------
+# spans
+# --------------------------------------------------------------------------
+
+def test_span_disabled_is_noop_singleton():
+    a = span("x")
+    b = span("y", k=1)
+    assert a is b is obs_spans._NOOP
+    with a:
+        pass
+    assert take_events() == []
+
+
+def test_span_enabled_records_and_nests():
+    with profiled() as prof:
+        with span("outer", tag="a"):
+            with span("inner"):
+                pass
+    names = [e.name for e in prof.events]
+    assert set(names) == {"outer", "inner"}
+    by = {e.name: e for e in prof.events}
+    assert by["inner"].depth == by["outer"].depth + 1
+    assert by["outer"].args == {"tag": "a"}
+    assert by["outer"].dur >= by["inner"].dur >= 0.0
+
+
+def test_profiled_restores_prior_state_and_isolates_events():
+    obs_spans.enable()
+    with span("before"):
+        pass
+    with profiled() as prof:
+        with span("during"):
+            pass
+    assert [e.name for e in prof.events] == ["during"]
+    # the outer enabled state survives the context
+    assert obs_spans.enabled()
+    names = [e.name for e in take_events()]
+    assert "before" in names
+
+
+def test_traced_decorator():
+    @traced("my.fn")
+    def fn(x):
+        return x + 1
+
+    assert fn(1) == 2          # disabled: plain call
+    with profiled() as prof:
+        assert fn(2) == 3
+    assert [e.name for e in prof.events] == ["my.fn"]
+
+
+def test_profile_totals_subtract_children():
+    with profiled() as prof:
+        with span("parent"):
+            with span("child"):
+                pass
+    tot = prof.totals()
+    assert tot["parent"]["self_s"] <= tot["parent"]["total_s"]
+    assert tot["parent"]["self_s"] == pytest.approx(
+        tot["parent"]["total_s"] - tot["child"]["total_s"], abs=1e-9)
+
+
+def test_profile_chrome_trace_validates():
+    from repro.obs.timeline import validate_chrome_trace
+    with profiled() as prof:
+        with span("a"):
+            with span("b"):
+                pass
+    obj = prof.chrome_trace()
+    assert validate_chrome_trace(json.loads(json.dumps(obj))) == []
+    names = {e["name"] for e in obj["traceEvents"] if e["ph"] == "X"}
+    assert names == {"a", "b"}
+
+
+def test_api_emits_spans():
+    with profiled() as prof:
+        tr = (Scenario(SPEC).train(batch=32, seq=2048)
+              .parallel(pp=2, tp=2, microbatches=4).trace())
+        tr.simulate()
+        tr.timeline()
+    names = {e.name for e in prof.events}
+    assert {"trace.instantiate", "trace.simulate",
+            "trace.timeline"} <= names
+
+
+def test_spans_thread_safety():
+    def work(i):
+        with span(f"t{i}"):
+            pass
+
+    with profiled() as prof:
+        threads = [threading.Thread(target=work, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert len(prof.events) == 8
+
+
+# --------------------------------------------------------------------------
+# metrics
+# --------------------------------------------------------------------------
+
+def test_counter_gauge_histogram():
+    c = obs_metrics.counter("c")
+    c.inc()
+    c.inc(4)
+    assert obs_metrics.counter("c").value == 5
+    g = obs_metrics.gauge("g")
+    g.set(2.5)
+    g.add(0.5)
+    assert g.value == 3.0
+    h = obs_metrics.histogram("h")
+    for v in (1e-7, 1e-3, 5.0):
+        h.observe(v)
+    assert h.count == 3
+    assert h.vmin == 1e-7 and h.vmax == 5.0
+    assert h.mean == pytest.approx((1e-7 + 1e-3 + 5.0) / 3)
+    assert sum(h.counts) == 3
+
+
+def test_snapshot_merges_cache_stats_and_diff():
+    obs_metrics.counter("evt").inc(2)
+    a = snapshot()
+    assert "caches" in a and "batched_stale_rewraps" in a["caches"]
+    assert a["counters"]["evt"] == 2
+    obs_metrics.counter("evt").inc(3)
+    b = snapshot()
+    d = diff(a, b)
+    assert d["counter.evt"] == 3
+    # nothing else ran between the two snapshots
+    assert all(v == 0 for k, v in d.items() if k != "counter.evt")
+
+
+def test_format_snapshot_and_diff_render():
+    obs_metrics.counter("x").inc()
+    s = obs_metrics.format_snapshot(snapshot(caches=False))
+    assert "counter.x" in s
+    assert obs_metrics.format_snapshot({"counters": {}}) \
+        == "(no metrics recorded)"
+    assert obs_metrics.format_diff({}) == "(no metric changed)"
+
+
+# --------------------------------------------------------------------------
+# logging
+# --------------------------------------------------------------------------
+
+def test_configure_idempotent_no_handler_stacking():
+    root = obs_log.configure(force=True)
+    n = len(root.handlers)
+    obs_log.configure()
+    obs_log.configure()
+    assert len(root.handlers) == n
+    assert root.propagate is False
+
+
+def test_get_logger_namespacing():
+    lg = obs_log.get_logger("core.dse")
+    assert lg.name == "repro.core.dse"
+    assert obs_log.get_logger().name == "repro"
+
+
+def test_log_level_from_configure(capsys):
+    import sys
+    obs_log.configure("debug", stream=sys.stderr, force=True)
+    try:
+        obs_log.get_logger("test").debug("breadcrumb %d", 7)
+        assert "repro.test: breadcrumb 7" in capsys.readouterr().err
+    finally:
+        obs_log.configure(force=True)   # back to env-derived default
+
+
+def test_batched_fallback_breadcrumbs_and_counters():
+    # the repro root logger does not propagate, so capture with our own
+    # handler rather than caplog
+    records = []
+
+    class _Capture(logging.Handler):
+        def emit(self, record):
+            records.append(record.getMessage())
+
+    lg = obs_log.get_logger("core.batched")
+    handler = _Capture(level=logging.DEBUG)
+    old_level = lg.level
+    lg.addHandler(handler)
+    lg.setLevel(logging.DEBUG)
+    try:
+        sc = (Scenario(SPEC).train(batch=32, seq=2048)
+              .with_backend("batched"))
+        res = sc.sweep(world=4, schedule="zb-h1")
+    finally:
+        lg.removeHandler(handler)
+        lg.setLevel(old_level)
+    assert len(res) > 0
+    # pp>1 zb-h1 configs fell back with a logged reason + counter
+    assert obs_metrics.counter("batched.fallback_schedule").value > 0
+    assert any("non-replayable" in m for m in records)
+    assert obs_metrics.counter("batched.kernel_calls").value > 0
+
+
+# --------------------------------------------------------------------------
+# cache taxonomy: evictions vs staleness re-wraps
+# --------------------------------------------------------------------------
+
+def test_batched_cache_counts_stale_rewrap_not_eviction():
+    from repro.api import _batched_engines, _engines
+
+    sc = Scenario(SPEC).train(batch=32, seq=2048)
+    env = sc.env()
+    before = (_batched_engines.stale_rewraps, _batched_engines.evictions)
+    e1 = _batched_engines.engine(SPEC, "train", env)
+    e2 = _batched_engines.engine(SPEC, "train", env)
+    assert e2 is e1
+    # invalidate ONLY the underlying compiled engine: the batched slot
+    # for the key survives but wraps a dead engine
+    with _engines._lock:
+        _engines._store.clear()
+    e3 = _batched_engines.engine(SPEC, "train", env)
+    assert e3 is not e1
+    assert e3.engine is _engines.engine(SPEC, "train", env)
+    assert _batched_engines.stale_rewraps == before[0] + 1
+    # regression: the re-wrap must NOT masquerade as LRU pressure
+    assert _batched_engines.evictions == before[1]
+
+
+def test_batched_cache_counts_real_eviction():
+    from repro.api import _BatchedEngineCache
+
+    env_a = Scenario(SPEC).train(batch=32, seq=2048).env()
+    env_b = Scenario(SPEC).train(batch=64, seq=2048).env()
+    cache = _BatchedEngineCache(maxsize=1)
+    cache.engine(SPEC, "train", env_a)
+    cache.engine(SPEC, "train", env_b)   # different key -> pushes env_a out
+    assert cache.evictions == 1
+    assert cache.stale_rewraps == 0
+    assert cache.builds == 2
+
+
+def test_compiled_cache_stats_new_keys():
+    stats = compiled_cache_stats()
+    for key in ("engines", "classes", "compiles", "hits",
+                "batched_engines", "graph_builds", "graph_hits",
+                "graph_evictions", "engine_builds", "engine_hits",
+                "engine_evictions", "batched_builds", "batched_hits",
+                "batched_evictions", "batched_stale_rewraps",
+                "series_builds", "series_hits", "series_evictions",
+                "series_regrows"):
+        assert key in stats, key
+
+
+# --------------------------------------------------------------------------
+# sweep progress + summary telemetry
+# --------------------------------------------------------------------------
+
+def _collecting_cb(calls):
+    def cb(done, total, skipped, eta):
+        calls.append((done, total, skipped, eta))
+    return cb
+
+
+@pytest.mark.parametrize("kw", [
+    {},                               # serial compiled
+    {"workers": 4},                   # thread executor
+], ids=["serial", "thread"])
+def test_sweep_progress_callback(kw):
+    calls = []
+    res = (Scenario(SPEC).train(batch=32, seq=2048)
+           .sweep(world=4, progress=_collecting_cb(calls), **kw))
+    assert len(res) > 0
+    done, total, skipped, eta = calls[-1]
+    assert done == total == len(res) + len(res.skipped)
+    assert skipped == len(res.skipped)
+    assert eta == 0.0
+    # done is monotone non-decreasing across callbacks
+    dones = [c[0] for c in calls]
+    assert dones == sorted(dones)
+    # eta is None before the first completion, a float after
+    assert all(e is None or e >= 0.0 for _, _, _, e in calls)
+
+
+def test_sweep_progress_callback_batched():
+    calls = []
+    res = (Scenario(SPEC).train(batch=32, seq=2048).with_backend("batched")
+           .sweep(world=4, progress=_collecting_cb(calls)))
+    assert len(res) > 0
+    assert calls[-1][0] == calls[-1][1] == len(res) + len(res.skipped)
+
+
+def test_sweep_progress_counts_prefiltered_as_skipped():
+    calls = []
+    # microbatches=3 never divides a per-rank batch of 32/dp -> many
+    # prefilter skips
+    res = (Scenario(SPEC).train(batch=32, seq=2048)
+           .sweep(world=4, microbatches=3,
+                  progress=_collecting_cb(calls)))
+    assert res.pruned     # something was prefiltered
+    assert calls[-1][0] == calls[-1][1]
+    assert calls[-1][2] == len(res.skipped)
+
+
+def test_sweep_summary_telemetry_lines():
+    res = (Scenario(SPEC).train(batch=32, seq=2048).with_backend("batched")
+           .sweep(world=4))
+    s = res.summary()
+    assert "hit ratio" in s
+    assert "kernel call(s)" in s and "batch sizes" in s
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def test_obs_cli_summarize_diff_validate(tmp_path, capsys):
+    from repro.obs.__main__ import main
+
+    obs_metrics.counter("cli.evt").inc(2)
+    a = tmp_path / "a.json"
+    b = tmp_path / "b.json"
+    a.write_text(json.dumps(snapshot(caches=False)))
+    obs_metrics.counter("cli.evt").inc(5)
+    b.write_text(json.dumps(snapshot(caches=False)))
+
+    assert main(["summarize", str(a)]) == 0
+    assert "counter.cli.evt" in capsys.readouterr().out
+    assert main(["diff", str(a), str(b)]) == 0
+    assert "+5" in capsys.readouterr().out
+
+    tl = tmp_path / "tl.json"
+    tr = (Scenario(SPEC).train(batch=32, seq=2048)
+          .parallel(pp=2, tp=2, microbatches=4).trace())
+    tr.timeline(str(tl))
+    assert main(["validate", str(tl)]) == 0
+    assert "OK" in capsys.readouterr().out
+
+    bad = tmp_path / "bad.json"
+    obj = json.loads(tl.read_text())
+    for ev in obj["traceEvents"]:
+        if ev["ph"] == "X":
+            ev["dur"] = -1.0          # invalid duration
+            break
+    bad.write_text(json.dumps(obj))
+    assert main(["validate", str(bad)]) == 1
+    assert "STG501" in capsys.readouterr().out

@@ -1,0 +1,237 @@
+"""Timeline-export tests: exact reconciliation of the Perfetto export
+against ``SimResult.step_time`` for every bundled arch, train and serve,
+across all four pipeline schedules; Chrome-trace schema validation;
+serving pool lanes; resilience epoch tracks; and the STG5xx audit's
+ability to catch corrupted exports."""
+import json
+
+import pytest
+
+from repro import Scenario
+from repro.analysis import check_timeline, check_timeline_file
+from repro.configs import ARCHS, get
+from repro.obs.timeline import validate_chrome_trace
+
+SCHEDULES = ("gpipe", "1f1b", "zb-h1", "interleaved")
+
+
+def _trace(name, mode, backend="compiled"):
+    spec = get(name).smoke
+    sc = Scenario(spec)
+    if mode == "train":
+        sc = sc.train(batch=32, seq=2048)
+    else:
+        sc = sc.serve(batch=8, seq=512)          # prefill
+    return (sc.with_backend(backend)
+            .parallel(pp=4, tp=2, microbatches=8).trace())
+
+
+# --------------------------------------------------------------------------
+# exact reconciliation: all archs x modes x schedules
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["train", "serve"])
+@pytest.mark.parametrize("name", ARCHS)
+def test_reconcile_exact_all_schedules(name, mode):
+    tr = _trace(name, mode)
+    for sched in SCHEDULES:
+        sim = tr.simulate(schedule=sched)
+        tl = tr.timeline(schedule=sched)
+        # the invariant: per-track span sums tile [0, step_time] with
+        # float-EXACT equality, because timeline events carry the same
+        # float arithmetic the simulator used
+        assert tl.reconcile(sim.step_time) == [], (name, mode, sched)
+        assert tl.end_time == sim.step_time, (name, mode, sched)
+
+
+@pytest.mark.parametrize("name", ARCHS[:2])
+def test_reconcile_exact_sympy_backend(name):
+    tr = _trace(name, "train", backend="sympy")
+    for sched in SCHEDULES:
+        sim = tr.simulate(schedule=sched)
+        tl = tr.timeline(schedule=sched)
+        assert tl.reconcile(sim.step_time) == []
+        assert tl.end_time == sim.step_time
+
+
+def test_reconcile_detects_mismatch():
+    tr = _trace(ARCHS[0], "train")
+    tl = tr.timeline()
+    sim = tr.simulate()
+    assert tl.reconcile(sim.step_time * 1.01) != []
+
+
+# --------------------------------------------------------------------------
+# Chrome-trace schema + audit
+# --------------------------------------------------------------------------
+
+def test_chrome_trace_schema_validates():
+    tr = _trace(ARCHS[0], "train")
+    obj = json.loads(json.dumps(tr.timeline().chrome_trace()))
+    assert validate_chrome_trace(obj) == []
+    assert obj["otherData"]["kind"] == "simulated-execution"
+    assert obj["otherData"]["step_time_s"] == tr.simulate().step_time
+    # one named track per pipeline stage
+    names = {e["args"]["name"] for e in obj["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"stage 0", "stage 1", "stage 2", "stage 3"} <= names
+
+
+def test_comm_spans_annotated():
+    tr = _trace(ARCHS[0], "train")
+    obj = tr.timeline().chrome_trace()
+    comm = [e for e in obj["traceEvents"]
+            if e["ph"] == "X" and e.get("cat") == "comm"]
+    assert comm
+    for e in comm:
+        assert "coll" in e["args"] and "bytes" in e["args"], e["name"]
+
+
+def test_timeline_save_and_file_audit(tmp_path):
+    tr = _trace(ARCHS[0], "train")
+    path = tmp_path / "tl.json"
+    tr.timeline(str(path), schedule="1f1b")
+    rep = check_timeline_file(str(path))
+    assert rep.ok, rep.render()
+
+
+def test_utilization_report():
+    tr = _trace(ARCHS[0], "train")
+    rep = tr.timeline().utilization()
+    assert 0.0 < rep.mfu < 1.0
+    assert 0.0 <= rep.bubble_fraction < 1.0
+    assert 0.0 <= rep.exposed_comm_fraction <= 1.0
+    assert "MFU" in rep.summary()
+
+
+def test_memory_counters_exported():
+    tr = _trace(ARCHS[0], "train")
+    obj = tr.timeline(memory=True).chrome_trace()
+    assert any(e["ph"] == "C" for e in obj["traceEvents"])
+
+
+# --------------------------------------------------------------------------
+# STG5xx: the audit catches corrupted exports
+# --------------------------------------------------------------------------
+
+def _corrupt(obj, fn):
+    obj = json.loads(json.dumps(obj))
+    fn(obj)
+    return obj
+
+
+@pytest.fixture(scope="module")
+def train_trace_json():
+    return _trace(ARCHS[0], "train").timeline().chrome_trace()
+
+
+def test_stg501_schema_violation(train_trace_json):
+    def negative_dur(obj):
+        next(e for e in obj["traceEvents"] if e["ph"] == "X")["dur"] = -1.0
+    rep = check_timeline(_corrupt(train_trace_json, negative_dur))
+    assert "STG501" in rep.codes()
+    assert not rep.ok
+
+
+def test_stg502_tiling_gap(train_trace_json):
+    def shift(obj):
+        xs = [e for e in obj["traceEvents"]
+              if e["ph"] == "X" and e["pid"] == 0 and e["tid"] == 0]
+        xs.sort(key=lambda e: e["ts"])
+        ev = next(e for e in xs[:-1] if e["dur"] > 1.0)
+        ev["dur"] *= 0.5        # end recedes: a gap before the next span
+    rep = check_timeline(_corrupt(train_trace_json, shift))
+    assert "STG502" in rep.codes()
+
+
+def test_stg503_step_time_mismatch(train_trace_json):
+    def inflate(obj):
+        obj["otherData"]["step_time_s"] *= 2.0
+    rep = check_timeline(_corrupt(train_trace_json, inflate))
+    assert "STG503" in rep.codes()
+
+
+def test_stg504_missing_comm_attrs(train_trace_json):
+    def strip(obj):
+        ev = next(e for e in obj["traceEvents"]
+                  if e["ph"] == "X" and e.get("cat") == "comm")
+        del ev["args"]["bytes"]
+    rep = check_timeline(_corrupt(train_trace_json, strip))
+    assert "STG504" in rep.codes()
+
+
+def test_clean_export_audits_clean(train_trace_json):
+    rep = check_timeline(train_trace_json)
+    assert rep.ok and rep.codes() == set()
+
+
+# --------------------------------------------------------------------------
+# resilience epochs
+# --------------------------------------------------------------------------
+
+def _resilience_timeline():
+    spec = get(ARCHS[0]).smoke
+    sc = (Scenario(spec).train(batch=32, seq=2048)
+          .resilience(mtbf=300.0, seed=3))
+    tr = sc.parallel(pp=4, tp=2, microbatches=8).trace()
+    return tr.timeline(resilience=sc.resilience_spec, resilience_steps=2000)
+
+
+def test_resilience_track_epochs_ordered():
+    tl = _resilience_timeline()
+    obj = tl.chrome_trace()
+    marks = [e for e in obj["traceEvents"]
+             if e["ph"] == "X" and e.get("cat") == "resilience"]
+    assert marks, "small MTBF must sample failures over 2000 steps"
+    fails = sorted((e for e in marks if e["args"]["kind"] == "failure"),
+                   key=lambda e: e["ts"])
+    rests = sorted((e for e in marks if e["args"]["kind"] == "restore"),
+                   key=lambda e: e["ts"])
+    # the same invariants STG401-404 enforce on exported traces:
+    # epochs number 0..n-1 in time order, failure/restore alternate,
+    # each pair agrees on epoch + checkpoint step
+    assert [f["args"]["epoch"] for f in fails] == list(range(len(fails)))
+    assert len(rests) == len(fails)
+    for i, (f, r) in enumerate(zip(fails, rests)):
+        assert r["args"]["epoch"] == f["args"]["epoch"] == i
+        assert r["args"]["ckpt_step"] == f["args"]["ckpt_step"]
+        assert r["ts"] >= f["ts"]
+    assert check_timeline(obj).ok
+
+
+def test_stg505_epoch_order_violation():
+    obj = _resilience_timeline().chrome_trace()
+    fails = [e for e in obj["traceEvents"]
+             if e.get("cat") == "resilience"
+             and e["args"]["kind"] == "failure"]
+    assert len(fails) >= 2
+    fails[0]["args"]["epoch"], fails[1]["args"]["epoch"] = \
+        fails[1]["args"]["epoch"], fails[0]["args"]["epoch"]
+    rep = check_timeline(json.loads(json.dumps(obj)))
+    assert "STG505" in rep.codes()
+
+
+# --------------------------------------------------------------------------
+# serving job timelines: pool lanes
+# --------------------------------------------------------------------------
+
+def test_job_timeline_pool_lanes(tmp_path):
+    spec = get("minitron-8b").smoke
+    job = (Scenario(spec).generation(out_tokens=32, batch=8, seq=256)
+           .disaggregate(prefill_pool=dict(tp=2),
+                         decode_pool=dict(tp=1),
+                         kv_transfer=True))
+    res = job.evaluate()
+    tl = job.timeline(str(tmp_path / "job.json"))
+    obj = json.loads((tmp_path / "job.json").read_text())
+    assert validate_chrome_trace(obj) == []
+    assert obj["otherData"]["kind"] == "serving-job"
+    assert obj["otherData"]["total_time_s"] == res.total_time
+    lanes = {e["args"]["name"] for e in obj["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert "pool prefill" in lanes and "pool decode" in lanes
+    assert "pool kv-transfer" in lanes
+    kv = [e for e in obj["traceEvents"]
+          if e["ph"] == "X" and e.get("cat") == "comm"]
+    assert any(e["args"].get("coll") == "KVTransfer" for e in kv)
+    assert check_timeline_file(str(tmp_path / "job.json")).ok
