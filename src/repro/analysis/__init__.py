@@ -25,16 +25,25 @@ simulation), reported through one diagnostics framework:
   timeline audit (``STG5xx``): Chrome-trace schema, scheduling-stream
   tiling against the recorded step time, comm-span annotations,
   resilience-track epoch order.
+* :func:`prove_space` — the symbolic invariant prover (``STG6xx``):
+  certifies FLOP/comm conservation, guard completeness/disjointness,
+  branch-and-bound soundness, and memory monotonicity per *structure
+  class* — i.e. for entire DSE spaces at once, not single traces.
 
 High-level entry points: :meth:`repro.api.Trace.verify`,
-:meth:`repro.api.Job.verify`, ``python -m repro.analysis <trace_dir>``,
-``python -m repro.analysis --timeline <file.json>``.
+:meth:`repro.api.Job.verify`, :meth:`repro.api.Scenario.prove`,
+``python -m repro.analysis <trace_dir>``,
+``python -m repro.analysis --timeline <file.json>``,
+``python -m repro.analysis --prove``; every mode exports SARIF via
+``--sarif out.json`` (:func:`to_sarif`).
 """
 from .comm_checks import check_comm
 from .diagnostics import (Diagnostic, RULES, Report, SEVERITIES, rule)
 from .graph_lint import check_guards, lint_graph
+from .prover import ClassCertificate, SpaceCertificate, prove_space
 from .resilience_checks import (check_resilience_manifest,
                                 check_resilience_nodes, resilience_markers)
+from .sarif import to_sarif, write_sarif
 from .schedule_checks import check_schedule, check_workload_schedule
 from .timeline_checks import check_timeline, check_timeline_file
 from .trace_checks import check_trace, check_trace_dir
@@ -48,6 +57,8 @@ __all__ = [
     "resilience_markers",
     "check_timeline", "check_timeline_file",
     "verify_workload", "verify_graph",
+    "prove_space", "SpaceCertificate", "ClassCertificate",
+    "to_sarif", "write_sarif",
 ]
 
 

@@ -3,7 +3,8 @@
 Every check emits structured :class:`Diagnostic` records — a stable
 rule code (``STG0xx`` graph lint, ``STG1xx`` distributed comm,
 ``STG2xx`` schedule, ``STG3xx`` Chakra trace, ``STG4xx`` resilience
-annotations, ``STG5xx`` observability timelines), a severity, a locus
+annotations, ``STG5xx`` observability timelines, ``STG6xx`` symbolic
+space prover), a severity, a locus
 (node / rank / stage / phase), a human message, and an optional fixit
 hint — collected into a :class:`Report`.  The registry below is the
 single source of truth for code -> (severity, title); passes emit via
@@ -115,6 +116,21 @@ TIMELINE_COMM_ATTRS = rule("STG504", ERROR, "comm span missing its "
                                             "collective annotation")
 TIMELINE_RESILIENCE_TRACK = rule("STG505", ERROR, "resilience track epochs "
                                                   "out of order or malformed")
+
+# ---- symbolic space prover (STG6xx) ----------------------------------------
+FLOP_NOT_CONSERVED = rule("STG601", ERROR, "distributed FLOPs are not the "
+                                           "single-device FLOPs times an "
+                                           "exact replication monomial")
+COMM_NOT_CONSERVED = rule("STG602", ERROR, "collective wire-byte polynomial "
+                                           "breaks the ring-term invariant")
+CLASS_OVERLAP = rule("STG603", ERROR, "config matched by zero or multiple "
+                                      "structure-class guard sets")
+GUARD_UNFAITHFUL = rule("STG604", ERROR, "recorded guard set disagrees with "
+                                         "a fresh distribution trace")
+BOUND_UNSOUND = rule("STG605", ERROR, "branch-and-bound step floor exceeds "
+                                      "the true step-time polynomial")
+MEM_NOT_MONOTONE = rule("STG606", ERROR, "peak memory increases along a mesh "
+                                         "degree within a structure class")
 
 
 @dataclass(frozen=True)

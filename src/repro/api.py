@@ -593,6 +593,7 @@ class Scenario:
               resilience: Optional[ResilienceSpec] = None,
               search: str = "full",
               progress: Optional[Callable] = None,
+              prove: bool = False,
               **enum_kw) -> SweepResult:
         """One-shot DSE over every strategy for ``world`` devices (Fig 8).
 
@@ -638,7 +639,13 @@ class Scenario:
         ``search="pareto"`` returns only the (step_ms, peak_gb,
         effective_step_ms) Pareto front, and ``search="bnb"`` finds that
         same exact front by branch-and-bound over the config lattice,
-        visiting a small fraction of it (``SweepResult.visited``)."""
+        visiting a small fraction of it (``SweepResult.visited``).
+
+        ``prove=True`` statically certifies the whole swept space first
+        (see :meth:`prove`), attaches the
+        :class:`~repro.analysis.prover.SpaceCertificate` to
+        ``SweepResult.certificates``, and lets ``search="bnb"`` prune
+        memory-certified classes without evaluating the memory model."""
         env = self.env()
         hw = self._effective_hw(hw)
         if resilience is None:
@@ -676,7 +683,34 @@ class Scenario:
                              engine=engine, workers=workers,
                              algorithms=algos or None, rank_by=rank_by,
                              resilience=resilience, search=search,
-                             progress=progress, **enum_kw)
+                             progress=progress, prove=prove, **enum_kw)
+
+    def prove(self, world: int, hw: Optional[HardwareProfile] = None, *,
+              recompute: bool = False, retrace: bool = True,
+              **enum_kw) -> "SpaceCertificate":
+        """Statically certify the whole ``world``-device design space —
+        no config enumeration beyond the (tiny) degree lattice, no
+        simulation (paper Table VII invariants, per structure class).
+
+        Runs the symbolic invariant prover
+        (:func:`repro.analysis.prover.prove_space`) over every structure
+        class the space touches: FLOP conservation (STG601), comm-volume
+        conservation (STG602), guard completeness/disjointness
+        (STG603/604), branch-and-bound soundness (STG605), and memory
+        monotonicity (STG606).  ``enum_kw`` forwards to
+        :func:`repro.core.dse.enumerate_configs`; microbatch, schedule,
+        and placement dimensions are stripped — guards never see them,
+        so the certificate covers every choice of those for free.
+        Returns a :class:`~repro.analysis.prover.SpaceCertificate`
+        (``.ok``, ``.summary()``, ``.report``)."""
+        from .analysis.prover import prove_space
+        env = self.env()
+        hw = self._effective_hw(hw or TPU_V5E)
+        engine = _engines.engine(self.spec, self.mode, env)
+        with _span("scenario.prove", spec=self.spec.name, world=world):
+            return prove_space(engine, world=world, hw=hw,
+                               recompute=recompute, name=self.spec.name,
+                               retrace=retrace, **enum_kw)
 
     def _sweep_processes(self, world: int, hw: HardwareProfile, env: Env,
                          workers: int, *, mem_limit_gb, recompute,

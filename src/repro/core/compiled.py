@@ -55,7 +55,7 @@ from .stg import (CAT_COMM, Comm, CrossEntropy, Einsum, Graph, Map, Norm,
 from .symbolic import Env, prod
 from .tensor import DTYPE_BYTES
 
-__all__ = ["CompiledBackend", "CostProgram"]
+__all__ = ["CompiledBackend", "CostProgram", "collective_wire"]
 
 
 @functools.lru_cache(maxsize=65536)
@@ -68,6 +68,25 @@ def _numel_expr(shape: tuple) -> sp.Expr:
 _PER_RANK_COLLS = ("AllReduce", "Broadcast", "Reduce", "Gather", "Scatter")
 _RING_COLLS = ("AllGather", "ReduceScatter", "Gather", "Scatter",
                "Broadcast", "Reduce")
+
+
+def collective_wire(coll: str, size, n):
+    """Ring-term wire bytes and step count of one collective: the single
+    lowered formula table shared by workload replay
+    (:meth:`CostProgram.instantiate`) and the branch-and-bound floor
+    (:func:`repro.core.dse._cell_floor`).
+
+    Pure arithmetic in ``size`` and ``n`` — callers may pass floats (the
+    numeric replay) or sympy symbols (the static prover checks these
+    formulas against the independent invariant table in
+    :mod:`repro.analysis.comm_checks` as exact symbolic identities).
+    Callers handle the degenerate ``n <= 1`` group themselves (wire is
+    zero; the formulas below assume a real ring)."""
+    if coll == "AllReduce":
+        return size * 2 * (n - 1) / n, 2 * (n - 1)
+    if coll in _RING_COLLS or coll == "AllToAll":
+        return size * (n - 1) / n, n - 1
+    return size, n - 1
 
 
 def _axis_counts(axes) -> tuple:
@@ -487,16 +506,7 @@ class CostProgram:
                         other_deg *= mesh[a]
                     full /= other_deg
                     size = full if coll in _PER_RANK_COLLS else full / n
-                    if n <= 1:
-                        wire = 0.0
-                    elif coll in _RING_COLLS:
-                        wire = size * (n - 1) / n
-                    elif coll == "AllReduce":
-                        wire = size * 2 * (n - 1) / n
-                    elif coll == "AllToAll":
-                        wire = size * (n - 1) / n
-                    else:
-                        wire = size
+                    wire = 0.0 if n <= 1 else collective_wire(coll, size, n)[0]
                     group = mesh.get(axis, 1)
             repeat = 1 if phase == "opt" else mb
             if build:
@@ -678,6 +688,47 @@ class CostProgram:
                 master += m_bytes / deg
         return float(weights + opt_states + master)
 
+    # ---- static introspection (repro.analysis.prover) ---------------------
+    def introspect(self) -> dict:
+        """Read-only bundle of the lowered tables for the static prover.
+
+        Everything the symbolic-invariant passes need, as plain data (no
+        graph, no sympy): per-tensor *exact* coefficient values (the
+        lambdified polynomials are evaluated over exact ints, so these
+        are exact), dtype byte widths, partition axis-exponent patterns,
+        the per-node recipes, the exact einsum letter extents, and the
+        recorded divisibility guards.  Mutating the returned containers
+        does not affect the program (top-level copies), but the
+        ``_NodeProg`` records are shared — treat them as frozen."""
+        t_ci = self._t_ci
+        return {
+            "nodes": tuple(self.nodes),
+            "names": tuple(self._tname),
+            "kinds": tuple(self._tkind),
+            "part": tuple(self._t_part),      # ((axis, exponent), ...) per tensor
+            "dbytes": tuple(self._t_db),
+            "numel": tuple(self._vals[c] for c in t_ci),   # exact values
+            "gbytes": tuple(self._gb),        # bound floats (numel * dbytes)
+            "eins": {i: tuple((self._vals[c], axes) for c, axes in letters)
+                     for i, letters in self._eins.items()},
+            "guards": dict(self.guards),
+        }
+
+    def layout_entries(self, pp: int, vstages: int = 1) -> list:
+        """Frozen per-node execution templates of one ``(pp, vstages)``
+        pipeline cut — ``(uid, name, kind, category, phase, stage,
+        vstage, wgrad, flop, ba_idx, outb_idx, comm, deps, tags)``
+        tuples, exactly what :meth:`instantiate` and the branch-and-bound
+        floor replay.  Public handle for the bound-soundness pass."""
+        return list(self._layout(max(1, pp), vstages).entries)
+
+    def memory_static(self, pp: int, vstages: int = 1, stage: int = 0
+                      ) -> tuple:
+        """Degree-independent memory-lifetime structure of one stage:
+        ``(weight tidxs, update recipes, activation intervals)`` — the
+        inputs the monotonicity certificate reasons over."""
+        return self._mem_static(max(1, pp), vstages, stage)
+
 
 def _evaluate_exprs(exprs: list, env: Env) -> list:
     """Evaluate all coefficient expressions at once via ``sympy.lambdify``
@@ -756,6 +807,16 @@ class CompiledBackend:
 
     def state_bytes(self, cfg: ParallelCfg, **kw) -> float:
         return self.program(cfg).state_bytes(cfg, **kw)
+
+    def classes(self) -> dict:
+        """Snapshot of the structure-class cache: structure key ->
+        compiled :class:`CostProgram` list (compile order).  The static
+        prover's partition pass checks every degree-lattice point
+        against ALL programs sharing its key (exactly one guard set may
+        match), so it needs the full per-key population, not just the
+        dispatch winner."""
+        with self._lock:
+            return {k: list(v) for k, v in self._classes.items()}
 
     def stats(self) -> dict:
         with self._lock:

@@ -191,15 +191,40 @@ def _div_ok(env: Env, expr, cfg: "ParallelCfg", axes: tuple[str, ...]) -> bool:
     return ok
 
 
-def guards_match(guards: dict, cfg: "ParallelCfg") -> bool:
-    """Would ``cfg`` take the same structural path as the recorded run?"""
+def guards_match_degrees(guards: dict, degrees: dict) -> bool:
+    """Evaluate a recorded guard set on a bare axis-degree assignment.
+
+    This is the static-prover entry point: the divisibility predicates
+    depend on a config ONLY through its axis degrees, so checking every
+    point of the (small, saturated) degree lattice proves a partition
+    property for every concrete config — microbatches, schedules,
+    placements, and batch shapes never enter a guard."""
     for (val, axes), ok in guards.items():
         deg = 1
         for a in axes:
-            deg *= cfg.axes[a]
+            deg *= degrees[a]
         if (val % deg == 0) != ok:
             return False
     return True
+
+
+def guards_match(guards: dict, cfg: "ParallelCfg") -> bool:
+    """Would ``cfg`` take the same structural path as the recorded run?"""
+    return guards_match_degrees(guards, cfg.axes)
+
+
+def guard_levels(guards: dict) -> dict:
+    """Per axis-name tuple, the sorted distinct dim values its recorded
+    divisibility predicates test — the thresholds of the guard lattice.
+
+    Degrees beyond every threshold's largest power-of-two divisor are
+    indistinguishable to the guard set (``val % deg`` is nonzero for all
+    of them), so a prover can saturate the lattice with finitely many
+    abstract degree assignments (see ``repro.analysis.prover``)."""
+    levels: dict = {}
+    for (val, axes), _ok in guards.items():
+        levels.setdefault(axes, set()).add(val)
+    return {axes: tuple(sorted(vals)) for axes, vals in levels.items()}
 
 
 def weight_storage_spec(w: STensor, cfg: ParallelCfg, env: Env) -> ShardSpec:

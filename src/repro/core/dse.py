@@ -43,7 +43,7 @@ from typing import Callable, Iterable, Optional
 from ..obs import metrics as _metrics
 from ..obs.log import get_logger
 from ..obs.spans import span as _span
-from .compiled import _PER_RANK_COLLS, _RING_COLLS, CompiledBackend
+from .compiled import _PER_RANK_COLLS, CompiledBackend, collective_wire
 from .costmodel import HardwareProfile, TPU_V5E
 from .distribute import ParallelCfg, distribute
 from .graphdist import apply_pipeline
@@ -179,7 +179,8 @@ class SweepResult(list):
                  batch_stats: Optional[dict] = None,
                  evaluated: Optional[int] = None,
                  visited: Optional[int] = None,
-                 total: Optional[int] = None):
+                 total: Optional[int] = None,
+                 certificates=None):
         super().__init__(points)
         self.skipped: list[SkippedConfig] = list(skipped)
         self.backend = backend
@@ -189,6 +190,9 @@ class SweepResult(list):
         self.evaluated = evaluated
         self.visited = visited
         self.total = total
+        # SpaceCertificate from sweep(prove=True): the symbolic-invariant
+        # proof over every structure class the sweep replays
+        self.certificates = certificates
 
     @property
     def points(self) -> list[DSEPoint]:
@@ -208,21 +212,31 @@ class SweepResult(list):
             bits[0] = (f"{len(self)} Pareto-front point(s) of "
                        f"{self.evaluated} evaluated")
         elif self.search == "bnb":
-            pct = (100.0 * self.visited / self.total) if self.total else 0.0
+            visited = self.visited or 0
+            # total == 0 happens when every enumerated config was
+            # prefiltered as infeasible — report the counts without
+            # pretending a percentage exists
+            pct = (f"{100.0 * visited / self.total:.1f}%" if self.total
+                   else "n/a")
             bits[0] = (f"{len(self)} Pareto-front point(s); branch-and-"
-                       f"bound visited {self.visited}/{self.total} "
-                       f"configs ({pct:.1f}%)")
+                       f"bound visited {visited}/{self.total or 0} "
+                       f"configs ({pct})")
         if self.skipped:
             pruned = ", ".join(f"{k}={v}"
                                for k, v in sorted(self.pruned.items()))
             bits.append(f"{len(self.skipped)} skipped ({pruned})")
         es = self.engine_stats
         if es:
-            lookups = es["compiles"] + es["hits"]
-            ratio = (es["hits"] / lookups) if lookups else 0.0
-            bits.append(f"engine: {es['classes']} structure class(es), "
-                        f"{es['compiles']} compile(s), {es['hits']} hit(s) "
-                        f"({100.0 * ratio:.0f}% hit ratio)")
+            lookups = es.get("compiles", 0) + es.get("hits", 0)
+            # no lookups (all configs prefiltered): a 0% ratio would be a
+            # lie — nothing was ever asked of the engine
+            ratio = (f"{100.0 * es['hits'] / lookups:.0f}% hit ratio"
+                     if lookups else "n/a hit ratio")
+            bits.append(f"engine: {es.get('classes', 0)} structure "
+                        f"class(es), {es.get('compiles', 0)} compile(s), "
+                        f"{es.get('hits', 0)} hit(s) ({ratio})")
+        if self.certificates is not None:
+            bits.append(f"proved: {self.certificates.summary()}")
         bs = self.batch_stats
         if bs and bs.get("batch_sizes"):
             sizes = bs["batch_sizes"]
@@ -571,12 +585,7 @@ def _cell_floor(prog, cfg0: ParallelCfg, hw: HardwareProfile,
                 for a in other:
                     full /= mesh[a]
                 size = full if coll in _PER_RANK_COLLS else full / n
-                if coll == "AllReduce":
-                    wire, steps = size * 2 * (n - 1) / n, 2 * (n - 1)
-                elif coll in _RING_COLLS or coll == "AllToAll":
-                    wire, steps = size * (n - 1) / n, n - 1
-                else:
-                    wire, steps = size, n - 1
+                wire, steps = collective_wire(coll, size, n)
                 bw = hw.link_bw_axis.get(axis, hw.link_bw)
                 d = wire / bw + steps * lat
             if ph == "opt":
@@ -625,13 +634,30 @@ def _cell_floor(prog, cfg0: ParallelCfg, hw: HardwareProfile,
     return M, path, O
 
 
+def step_lower_bound(cfg: ParallelCfg, floor: tuple) -> float:
+    """Per-config step-time lower bound from a cell's floor pieces:
+    ``max(mb * M, path) + O`` seconds.
+
+    The chunk-chain path bound only holds where a whole chunk slot is
+    the dependency unit — zb-h1 splits weight-grads off the chain, so
+    pipelined zb-h1 points use the busy bound alone.  Module-level (not
+    a closure) so the static prover can certify exactly the formula the
+    search applies (``repro.analysis.prover``, rule STG605)."""
+    m, path, o = floor
+    lb = cfg.microbatches * m
+    if cfg.schedule != "zb-h1" or max(1, cfg.pp) <= 1:
+        lb = max(lb, path)
+    return lb + o
+
+
 def branch_and_bound(engine: CompiledBackend, cfgs: list,
                      hw: HardwareProfile, *, recompute: bool = False,
                      name: str = "dse", algorithms: Optional[dict] = None,
                      verify: bool = False,
                      mem_limit_gb: Optional[float] = None,
                      resilience=None,
-                     progress: "Optional[_Progress]" = None
+                     progress: "Optional[_Progress]" = None,
+                     certificates=None
                      ) -> tuple[list, list, int]:
     """Pruned search over the config lattice; returns
     ``(evaluated points, skipped, visited)`` with the exhaustive Pareto
@@ -685,23 +711,48 @@ def branch_and_bound(engine: CompiledBackend, cfgs: list,
         plan.append((slb_min, key, floor))
     plan.sort(key=lambda x: x[0])
 
-    def _step_lb(cfg, floor):
-        m, path, o = floor
-        lb = cfg.microbatches * m
-        # the chunk-chain path bound only holds where a whole chunk slot
-        # is the dependency unit (zb-h1 splits weight-grads off-chain)
-        if cfg.schedule != "zb-h1" or max(1, cfg.pp) <= 1:
-            lb = max(lb, path)
-        return lb + o
+    # Structure classes carrying a memory-monotonicity certificate
+    # (peak memory non-increasing in every mesh degree, proved by
+    # repro.analysis.prover) may be pruned from a *lower bound* on
+    # memory — the exact peak of any already-seen config of the same
+    # class whose degrees are componentwise >= the candidate's (and,
+    # when the space's inflight factors are certified non-decreasing in
+    # mb, whose microbatch count is <=) — before the closed-form memory
+    # model is even consulted.  Since the bound is <= the exact value,
+    # strict domination of the bound vector implies strict domination
+    # of the exact one: the front and the visited count are provably
+    # identical to the uncertified search.
+    mono_ids = (certificates.memory_monotone_programs()
+                if certificates is not None else frozenset())
+    mb_mono = bool(certificates is not None
+                   and getattr(certificates, "inflight_monotone", False))
+    mem_memo: dict = {}
 
     archive = _Archive()
     points: list[DSEPoint] = []
     visited = 0
     for _slb, key, floor in plan:
         prog, cell = cells[key]
+        axis_names = tuple(a for a, _ in key[1])
         for cfg in sorted(cell, key=lambda c: c.microbatches):
-            slb_ms = _step_lb(cfg, floor) * 1e3
+            slb_ms = step_lower_bound(cfg, floor) * 1e3
+            degs = tuple(cfg.axes.get(a, 1) for a in axis_names)
+            mb = cfg.microbatches
+            mkey = (key[0], key[2], key[3], cfg.schedule)
+            if id(prog) in mono_ids:
+                lb_mem = max((m for dg, mbe, m in mem_memo.get(mkey, ())
+                              if (mbe == mb or (mb_mono and mbe <= mb))
+                              and all(x >= y for x, y in zip(dg, degs))),
+                             default=None)
+                if (lb_mem is not None
+                        and archive.prunes((slb_ms, lb_mem, slb_ms))):
+                    _metrics.counter("dse.bnb_cert_pruned").inc()
+                    if progress is not None:
+                        progress.tick()
+                    continue
             mem_gb = prog.peak_memory(cfg, recompute=recompute).peak_gb
+            if id(prog) in mono_ids:
+                mem_memo.setdefault(mkey, []).append((degs, mb, mem_gb))
             if archive.prunes((slb_ms, mem_gb, slb_ms)):
                 _metrics.counter("dse.bnb_pruned").inc()
                 if progress is not None:
@@ -770,6 +821,7 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
           resilience=None,
           search: str = "full",
           progress: Optional[Callable] = None,
+          prove: bool = False,
           **enum_kw) -> SweepResult:
     """Evaluate every enumerated strategy; see module docstring.
 
@@ -813,6 +865,14 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
     while tp*pp-heavy ones rewind to storage, so the two rankings can
     disagree.  With the default ``rank_by="step_time"`` and no spec the
     sweep is bit-identical to before.
+
+    ``prove=True`` runs the symbolic invariant prover
+    (:func:`repro.analysis.prover.prove_space`) over every structure
+    class the enumeration touches *before* evaluating anything, attaches
+    the resulting :class:`~repro.analysis.prover.SpaceCertificate` to
+    ``SweepResult.certificates``, and — under ``search="bnb"`` — feeds
+    the memory-monotonicity certificates to the search so provably
+    dominated candidates are pruned without consulting the memory model.
     """
     if backend not in ("compiled", "sympy", "batched"):
         raise ValueError(
@@ -839,6 +899,16 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
             bengine = BatchedBackend(engine)
     elif backend == "compiled" and engine is None:
         engine = CompiledBackend(build, env, n_layers=n_layers)
+
+    certs = None
+    if prove:
+        # The prover reads lowered tables, so proving a sympy sweep
+        # still compiles each structure class once (evaluation itself
+        # stays on the sympy path — `engine` is left None there).
+        pengine = engine or CompiledBackend(build, env, n_layers=n_layers)
+        from ..analysis.prover import prove_space
+        certs = prove_space(pengine, cfgs=cfgs, hw=hw, recompute=recompute,
+                            name=name)
 
     # cheap pre-dispatch feasibility pass: infeasible factorizations are
     # counted and skipped-with-reason without consuming executor slots
@@ -888,12 +958,13 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
             engine, cfgs, hw, recompute=recompute, name=name,
             algorithms=algorithms, verify=verify,
             mem_limit_gb=mem_limit_gb, resilience=resilience,
-            progress=prog_cb)
+            progress=prog_cb, certificates=certs)
         front = pareto_front(points)
         rank_points(front, rank_by)
         return SweepResult(front, prefiltered + bnb_skips, backend=backend,
                            search="bnb", evaluated=len(points),
-                           visited=visited, total=len(cfgs), **_stats())
+                           visited=visited, total=len(cfgs),
+                           certificates=certs, **_stats())
 
     if backend == "batched":
         # Native batched evaluation; configs it cannot replay come back
@@ -938,6 +1009,7 @@ def sweep(build: Callable[[], tuple], env: Env, world: int,
         rank_points(points, rank_by)
         return SweepResult(points, skipped, backend=backend,
                            search="pareto", evaluated=evaluated,
-                           total=len(cfgs), **_stats())
+                           total=len(cfgs), certificates=certs, **_stats())
     rank_points(points, rank_by)
-    return SweepResult(points, skipped, backend=backend, **_stats())
+    return SweepResult(points, skipped, backend=backend,
+                       certificates=certs, **_stats())

@@ -1,0 +1,343 @@
+"""Symbolic invariant prover (``STG6xx``) — whole-space certification.
+
+Three guarantees under test:
+
+* every bundled arch × train/serve certifies with ZERO diagnostics —
+  the paper-level invariants (FLOP/comm conservation, guard partition,
+  bound soundness, memory monotonicity) hold symbolically for the whole
+  design space;
+* every *seeded* violation — deleted/duplicated/flipped guards,
+  corrupted shard exponents, broken wire formulas, an unsound floor —
+  yields exactly its expected STG6xx code;
+* certificate-driven pruning in ``search="bnb"`` returns a front
+  identical to the uncertified search on the pinned 340-config space
+  while visiting no more points (the certificate only replaces exact
+  memory values with sound lower bounds).
+"""
+import pytest
+
+from repro import Scenario
+from repro.analysis import prove_space
+from repro.analysis.diagnostics import Report
+from repro.analysis.sarif import to_sarif
+from repro.configs import ARCHS, get
+from repro.core import compiled as compiled_mod
+from repro.core import dse as dse_mod
+from repro.core.assemble import total_layers
+from repro.core.compiled import CompiledBackend
+from repro.core.dse import SweepResult, enumerate_configs
+
+WORLD = 8
+SPACE = dict(microbatches=(1, 2, 4, 8), schedule=("1f1b", "gpipe"))
+
+
+def _scenario(arch="qwen3-14b", mode="train"):
+    spec = get(arch).smoke
+    if mode == "train":
+        return Scenario(spec).train(batch=32, seq=64)
+    return Scenario(spec).decode(batch=4, kv_len=64)
+
+
+def _fresh_engine(sc):
+    """A private engine (NOT the process-wide cache) that corruption
+    tests may mutate freely."""
+    src = sc.builder()
+    return CompiledBackend(lambda: src.clone().graph, sc.env(),
+                           n_layers=total_layers(sc.spec))
+
+
+# ---- clean spaces certify ---------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["train", "serve"])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_all_archs_certify_clean(arch, mode):
+    sc = _scenario(arch, mode)
+    cert = sc.prove(WORLD)
+    assert cert.ok, cert.report.render()
+    assert not cert.report.diagnostics
+    assert cert.partition_ok and cert.inflight_monotone
+    assert cert.classes and all(c.ok for c in cert.classes)
+    assert cert.lattice_points > 0
+    assert "all invariants certified" in cert.summary()
+
+
+def test_certificate_covers_every_config_of_the_space():
+    """The lattice collapses mb/schedule dimensions: a 340-config space
+    certifies off tens of lattice points."""
+    sc = _scenario()
+    cfgs = list(enumerate_configs(16, **SPACE))
+    engine = _fresh_engine(sc)
+    cert = prove_space(engine, cfgs=cfgs)
+    assert cert.ok
+    assert cert.configs == len(cfgs) == 340
+    assert cert.lattice_points < len(cfgs) / 4
+    assert cert.memory_monotone_programs()
+
+
+# ---- seeded violations ------------------------------------------------------
+
+
+def _prove_corrupted(corrupt):
+    """Certify clean, apply ``corrupt(engine)``, re-prove; returns the
+    second certificate."""
+    sc = _scenario()
+    engine = _fresh_engine(sc)
+    cfgs = list(enumerate_configs(WORLD))
+    clean = prove_space(engine, cfgs=cfgs)
+    assert clean.ok, clean.report.render()
+    corrupt(engine)
+    return prove_space(engine, cfgs=cfgs)
+
+
+def _guarded_prog(engine):
+    for progs in engine.classes().values():
+        for prog in progs:
+            if prog.guards:
+                return prog
+    raise AssertionError("no guarded structure class compiled")
+
+
+def test_seeded_guard_deletion():
+    def corrupt(engine):
+        prog = _guarded_prog(engine)
+        prog.guards.pop(next(iter(prog.guards)))
+    cert = _prove_corrupted(corrupt)
+    assert not cert.ok
+    assert "STG604" in cert.report.codes()
+
+
+def test_seeded_guard_duplication():
+    """A spurious extra predicate (the 'duplicated guard' seed) — vacuously
+    true, so the class still matches its region — disagrees with the
+    fresh distribution trace."""
+    def corrupt(engine):
+        prog = _guarded_prog(engine)
+        (_val, axes), _ok = next(iter(prog.guards.items()))
+        prog.guards[(0, axes)] = True       # 0 % deg == 0 for every deg
+    cert = _prove_corrupted(corrupt)
+    assert not cert.ok
+    assert "STG604" in cert.report.codes()
+
+
+def test_seeded_class_duplication():
+    """Two structure classes claiming the same degrees break the
+    partition: some config would match twice."""
+    def corrupt(engine):
+        for key, progs in engine._classes.items():
+            for prog in progs:
+                if prog.guards:
+                    engine._classes[key].append(prog)
+                    return
+        raise AssertionError("no guarded structure class compiled")
+    cert = _prove_corrupted(corrupt)
+    assert not cert.ok
+    assert "STG603" in cert.report.codes()
+    assert not cert.partition_ok
+
+
+def test_seeded_guard_flip():
+    """Flipping a recorded predicate so the class widens into a point
+    another class owns breaks disjointness (STG603).  (A flip that only
+    *narrows* a class is self-healing — dispatch recompiles an honest
+    twin for the abandoned region — so the seed picks a widening flip.)"""
+    sc = _scenario()
+    engine = _fresh_engine(sc)
+    cfgs = list(enumerate_configs(WORLD))
+    clean = prove_space(engine, cfgs=cfgs)
+    assert clean.ok, clean.report.render()
+
+    from repro.core.distribute import guards_match_degrees
+    lattice: dict = {}
+    for cfg in cfgs:
+        key = CompiledBackend._structure_key(cfg)
+        lattice.setdefault(key, set()).add(
+            tuple(cfg.axes.get(a, 1) for a in key[0]))
+    for key, progs in engine.classes().items():
+        pts = [dict(zip(key[0], d)) for d in lattice.get(key, ())]
+        for prog in progs:
+            for gk, ok in prog.guards.items():
+                trial = dict(prog.guards)
+                trial[gk] = not ok
+                if any(guards_match_degrees(trial, p) for p in pts):
+                    prog.guards[gk] = not ok      # widen onto an owned point
+                    cert = prove_space(engine, cfgs=cfgs)
+                    assert not cert.ok
+                    assert "STG603" in cert.report.codes()
+                    assert not cert.partition_ok
+                    return
+    raise AssertionError("no widening guard flip available in this space")
+
+
+def test_seeded_flop_corruption():
+    """Doubling a shard exponent leaves a negative replication exponent
+    — world-summed FLOPs no longer equal single-device times a {0,1}
+    monomial."""
+    def corrupt(engine):
+        for progs in engine.classes().values():
+            for prog in progs:
+                for p in prog.nodes:
+                    if p.flop and p.flop[0] == "scale":
+                        t = p.flop[2]
+                        if prog._t_part[t]:
+                            a, _k = prog._t_part[t][0]
+                            prog._t_part[t] = ((a, 2),)
+                            return
+        raise AssertionError("no sharded scale-flop tensor found")
+    cert = _prove_corrupted(corrupt)
+    assert not cert.ok
+    assert "STG601" in cert.report.codes()
+
+
+def test_seeded_comm_corruption(monkeypatch):
+    """A wrong wire formula breaks the ring-term invariant against the
+    independent comm_checks table."""
+    def bad_wire(coll, size, n):
+        return size * (n - 1) / n, n - 1          # AllReduce lost a phase
+    sc = _scenario()
+    engine = _fresh_engine(sc)
+    cfgs = list(enumerate_configs(WORLD))
+    prove_space(engine, cfgs=cfgs)                # compile clean classes
+    monkeypatch.setattr(compiled_mod, "collective_wire", bad_wire)
+    cert = prove_space(engine, cfgs=cfgs, retrace=False)
+    assert not cert.ok
+    assert "STG602" in cert.report.codes()
+
+
+def test_seeded_unsound_floor(monkeypatch):
+    """An inflated cell floor disagrees with the independent
+    re-derivation at some lattice cell."""
+    real = dse_mod._cell_floor
+
+    def inflated(prog, cfg, hw, recompute, comm_ok):
+        m, path, o = real(prog, cfg, hw, recompute, comm_ok)
+        return m * 2 + 1e-6, path, o
+    sc = _scenario()
+    engine = _fresh_engine(sc)
+    cfgs = list(enumerate_configs(WORLD))
+    prove_space(engine, cfgs=cfgs)
+    monkeypatch.setattr(dse_mod, "_cell_floor", inflated)
+    cert = prove_space(engine, cfgs=cfgs, retrace=False)
+    assert not cert.ok
+    assert "STG605" in cert.report.codes()
+
+
+def test_seeded_zbh1_bound_misuse(monkeypatch):
+    """step_lower_bound applying the path term to pipelined zb-h1 would
+    over-bound (zb-h1 splits weight-grads off the chunk chain) — caught
+    behaviorally."""
+    def unsound(cfg, floor):
+        m, path, o = floor
+        return max(cfg.microbatches * m, path) + o
+    sc = _scenario()
+    engine = _fresh_engine(sc)
+    cfgs = list(enumerate_configs(WORLD))
+    prove_space(engine, cfgs=cfgs)
+    monkeypatch.setattr(dse_mod, "step_lower_bound", unsound)
+    cert = prove_space(engine, cfgs=cfgs, retrace=False)
+    assert not cert.ok
+    assert "STG605" in cert.report.codes()
+
+
+def test_seeded_memory_corruption():
+    """A negative partition exponent makes local bytes GROW with the
+    degree — the monotonicity certificate must refuse."""
+    def corrupt(engine):
+        for progs in engine.classes().values():
+            for prog in progs:
+                for t, pat in enumerate(prog._t_part):
+                    if pat:
+                        a, _k = pat[0]
+                        prog._t_part[t] = ((a, -1),)
+                        return
+        raise AssertionError("no partitioned tensor found")
+    cert = _prove_corrupted(corrupt)
+    assert not cert.ok
+    assert "STG606" in cert.report.codes()
+    assert not cert.memory_monotone_programs() or any(
+        not c.mem_monotone for c in cert.classes)
+
+
+# ---- certificate-driven pruning ---------------------------------------------
+
+
+def test_bnb_prove_front_and_visited_identical():
+    sc = _scenario()
+    plain = sc.sweep(16, search="bnb", **SPACE)
+    proved = sc.sweep(16, search="bnb", prove=True, **SPACE)
+    assert proved.certificates is not None and proved.certificates.ok
+    assert proved.visited == plain.visited
+    assert proved.total == plain.total == 328
+    assert ([p.cfg.describe() for p in plain]
+            == [p.cfg.describe() for p in proved])
+    assert [p.sim.step_time for p in plain] \
+        == [p.sim.step_time for p in proved]
+    assert "proved:" in proved.summary()
+
+
+def test_bnb_certificate_skips_memory_evaluations():
+    from repro.obs import metrics
+    sc = _scenario()
+    before = metrics.counter("dse.bnb_cert_pruned").value
+    sc.sweep(16, search="bnb", prove=True, **SPACE)
+    assert metrics.counter("dse.bnb_cert_pruned").value > before
+
+
+def test_sweep_full_attaches_certificates():
+    sc = _scenario()
+    res = sc.sweep(WORLD, search="full", prove=True)
+    assert res.certificates is not None
+    assert res.certificates.ok
+    assert "proved:" in res.summary()
+
+
+# ---- SweepResult.summary() robustness (satellite) ---------------------------
+
+
+def test_summary_no_division_by_zero_at_empty_total():
+    res = SweepResult([], [], backend="compiled", search="bnb",
+                      evaluated=0, visited=0, total=0)
+    s = res.summary()
+    assert "n/a" in s
+
+
+def test_summary_engine_hit_ratio_na_when_no_lookups():
+    res = SweepResult([], [], backend="compiled",
+                      engine_stats={"classes": 0, "compiles": 0, "hits": 0})
+    assert "n/a hit ratio" in res.summary()
+
+
+# ---- SARIF export (satellite) -----------------------------------------------
+
+
+def test_sarif_structure_and_rule_metadata():
+    rep = Report(name="unit")
+    rep.add("STG601", "flops differ", node="mlp_up")
+    rep.add("STG007", "infeasible", phase="fwd")
+    doc = to_sarif([rep])
+    assert doc["version"] == "2.1.0"
+    run = doc["runs"][0]
+    rules = {r["id"]: r for r in run["tool"]["driver"]["rules"]}
+    assert "STG601" in rules and "STG606" in rules
+    assert rules["STG601"]["defaultConfiguration"]["level"] == "error"
+    results = run["results"]
+    assert len(results) == 2
+    assert results[0]["ruleId"] == "STG601"
+    assert results[0]["level"] == "error"
+    assert results[1]["level"] == "note"
+    loc = results[0]["locations"][0]["logicalLocations"][0]
+    assert "mlp_up" in loc["fullyQualifiedName"]
+
+
+def test_sarif_cli_writes_file(tmp_path):
+    import json
+
+    from repro.analysis.__main__ import main
+    sc = _scenario()
+    tl = tmp_path / "tl.json"
+    sc.parallel(dp=2).trace().timeline(str(tl))
+    out = tmp_path / "out.sarif"
+    rc = main([str(tl), "--timeline", "--sarif", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["runs"][0]["tool"]["driver"]["rules"]
